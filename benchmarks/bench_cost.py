@@ -1,0 +1,56 @@
+"""Paper Fig. 8 — daily cost vs (uniform) query volume.
+
+SQUASH (N_QA = 84 fleet, priced per batch by Eqs. 3–8) against the two
+always-on server baselines (2× c7i.16xlarge / 2× c7i.4xlarge). Validates the
+paper's ordering: serverless is cheaper until ~1M–3.5M queries/day.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import header, save_json
+from repro.core.cost_model import (LambdaFleet, PricingConstants,
+                                   daily_cost_curve, server_baseline_cost,
+                                   squash_query_cost)
+
+VOLUMES = [1_000, 10_000, 100_000, 500_000, 1_000_000, 3_500_000, 10_000_000]
+
+
+def run(quick: bool = True) -> dict:
+    header("Fig. 8 — daily cost of SQUASH vs provisioned servers")
+    # A measured-representative batch: N_QA=84, ~2 QPs per QA visit,
+    # sub-second runtimes (cf. Fig. 10 sweet spot), warm fleet.
+    batch_q = 1000
+    # Fig. 10 sweet-spot latencies: ≈2.5 s QA / ≈3 s QP busy time per wave.
+    fleet = LambdaFleet(
+        n_qa=84, n_qp=170,
+        t_qa_s=84 * 2.5, t_qp_s=170 * 3.0, t_co_s=5.0,
+        s3_gets=0, efs_read_bytes=batch_q * 2 * 10 * 512,
+    )
+    per_batch = squash_query_cost(fleet)["total"]
+    squash_daily = daily_cost_curve(per_batch, batch_q, VOLUMES)
+    prices = PricingConstants()
+    big = server_baseline_cost(24.0, 2, prices.ec2_c7i_16xlarge_hour)
+    small = server_baseline_cost(24.0, 2, prices.ec2_c7i_4xlarge_hour)
+    rows = []
+    for v, c in zip(VOLUMES, squash_daily):
+        rows.append({"daily_queries": v, "squash": c,
+                     "server_large": big, "server_small": small})
+        print(f"  {v:>10,d} q/day  SQUASH=${c:8.2f}  small-2x=${small:7.2f} "
+              f" large-2x=${big:7.2f}")
+    # Paper ordering: SQUASH cheaper than the small server at low volume,
+    # servers win at very large volumes.
+    assert rows[0]["squash"] < small
+    assert rows[-1]["squash"] > small
+    crossover = next(r["daily_queries"] for r in rows
+                     if r["squash"] > small)
+    print(f"  crossover vs 2×c7i.4xlarge at ≈{crossover:,} q/day "
+          f"(paper: ~1M–3.5M)")
+    save_json("bench_cost", {"rows": rows, "per_batch_cost": per_batch,
+                             "crossover": crossover})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

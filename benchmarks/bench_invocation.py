@@ -1,0 +1,38 @@
+"""Paper Alg. 2 / Fig. 7 — tree-based invocation vs sequential fan-out.
+
+Makespan of the tree launch for every §5.3 configuration against the naïve
+coordinator-invokes-everything strawman, plus cold-start sensitivity.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import header, save_json
+from repro.core.invocation import InvocationSim, tree_size
+
+CONFIGS = [(10, 1), (4, 2), (4, 3), (5, 3), (6, 3), (4, 4)]
+
+
+def run(quick: bool = True) -> dict:
+    header("Alg. 2 — tree invocation makespan vs sequential")
+    rows = []
+    for f, lmax in CONFIGS:
+        n = tree_size(f, lmax)
+        for warm in ([1.0] if quick else [1.0, 0.9]):
+            sim = InvocationSim(branching=f, max_level=lmax,
+                                warm_fraction=warm)
+            tree_s = sim.makespan()
+            seq_s = sim.sequential_makespan()
+            rows.append({"F": f, "l_max": lmax, "n_qa": n,
+                         "warm_fraction": warm, "tree_s": tree_s,
+                         "sequential_s": seq_s,
+                         "speedup": seq_s / tree_s})
+            print(f"  F={f} l_max={lmax} N_QA={n:4d} warm={warm:.1f} "
+                  f"tree={tree_s:.3f}s seq={seq_s:.3f}s "
+                  f"({seq_s / tree_s:.1f}x)")
+    assert all(r["speedup"] > 2.0 for r in rows if r["n_qa"] >= 84)
+    save_json("bench_invocation", {"rows": rows})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Paper Fig. 10 — cost-to-performance trade-off vs N_QA.
+
+For each FaaS parallelism level (N_QA ∈ {10, 20, 84, 155, 258, 340}, the
+paper's §5.3 tree configurations) we assemble batch latency from the
+invocation simulator + measured stage times, then price the fleet with the
+§3.5 cost model. Reproduces the paper's qualitative findings: 84–155 is the
+sweet spot; 340 is invocation-dominated.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import header, save_json
+from benchmarks.bench_qps import FAAS_CONFIGS, measure_stage_times, serverless_qps
+from repro.core.cost_model import LambdaFleet, squash_query_cost
+from repro.core.invocation import InvocationSim
+
+
+def run(quick: bool = True) -> dict:
+    header("Fig. 10 — runtime & cost vs N_QA")
+    presets = ["sift1m"] if quick else ["sift1m", "gist1m"]
+    rows = []
+    for preset in presets:
+        meas = measure_stage_times(preset, quick)
+        for n_qa, (f, lmax) in FAAS_CONFIGS.items():
+            perf = serverless_qps(meas, n_qa)
+            n_qp = int(n_qa * meas["visits_per_query"]
+                       * 1000 / n_qa / max(1, 1000 // n_qa))
+            n_qp = max(n_qp, n_qa)
+            fleet = LambdaFleet(
+                n_qa=n_qa, n_qp=n_qp,
+                t_qa_s=n_qa * (perf["makespan_s"] * 0.4),
+                t_qp_s=n_qp * (perf["makespan_s"] * 0.5),
+                t_co_s=perf["makespan_s"],
+                s3_gets=0,  # warm fleet (DRE); cold adds n_qa + n_qp GETs
+                efs_read_bytes=int(1000 * 2 * 10
+                                   * meas["n"] / 1000 * 4),  # R·k rows
+            )
+            cost = squash_query_cost(fleet)
+            rows.append({"dataset": preset, "n_qa": n_qa,
+                         "makespan_s": perf["makespan_s"],
+                         "qps": perf["qps"],
+                         "cost_per_1k_queries": cost["total"],
+                         **{f"cost_{k}": v for k, v in cost.items()}})
+            print(f"  {preset} N_QA={n_qa:4d} latency={perf['makespan_s']:.2f}s"
+                  f" qps={perf['qps']:7.0f} cost/1k=${cost['total']:.5f}")
+        # sweet spot check: 84 or 155 should dominate 340 on cost·latency
+        by = {r["n_qa"]: r for r in rows if r["dataset"] == preset}
+        score = lambda r: r["makespan_s"] * r["cost_per_1k_queries"]
+        assert min(score(by[84]), score(by[155])) < score(by[340]), \
+            "84–155 should beat 340 on cost×latency (paper §5.5)"
+    save_json("bench_scaling", {"rows": rows})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

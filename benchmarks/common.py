@@ -1,0 +1,47 @@
+"""Shared helpers for the benchmark suite."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Callable, Dict
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def timed(fn: Callable, *args, repeats: int = 3, **kw):
+    """(result, best_seconds) — best-of-N wall time."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def save_json(name: str, payload: Dict[str, Any]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def recall_at_k(found_ids: np.ndarray, gt_ids: np.ndarray) -> float:
+    """Paper §5.1: recall@k = |G ∩ R| / k, averaged over queries."""
+    q, k = gt_ids.shape
+    total = 0.0
+    for i in range(q):
+        g = set(int(x) for x in gt_ids[i] if x >= 0)
+        r = set(int(x) for x in found_ids[i] if x >= 0)
+        denom = min(k, len(g)) or 1
+        total += len(g & r) / denom
+    return total / q
+
+
+def header(title: str):
+    print(f"\n{'=' * 72}\n{title}\n{'=' * 72}")

@@ -1,0 +1,154 @@
+"""§Perf hillclimb driver — hypothesis → change → re-lower → measure.
+
+Three pairs (selection rationale in EXPERIMENTS.md §Perf):
+  A. arctic-480b × train_4k     (worst roofline fraction, memory-dominated)
+  B. llama3-8b × decode_32k     (most collective-bound)
+  C. mamba2-370m × prefill_32k  (paper-technique representative)
+
+Each variant toggles ONE mechanism and re-derives the three roofline terms
+via benchmarks.roofline.roofline_pair. Results append to
+results/perf_iterations.json.
+
+  PYTHONPATH=src python -m benchmarks.perf_iterations [--pair A|B|C] [--variant NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from benchmarks.roofline import RESULTS_DIR, roofline_pair
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import hints as H  # noqa: E402
+from repro.models import ssm as SSM  # noqa: E402
+
+
+def _set(obj, attr, val):
+    old = getattr(obj, attr)
+    setattr(obj, attr, val)
+    return old
+
+
+def run_variant(pair: str, variant: str, mesh) -> dict:
+    """Configure the variant, measure, restore."""
+    kw = {}
+    restores = []
+    try:
+        if pair == "A":          # arctic MoE train
+            arch, shape = "arctic-480b", "train_4k"
+            if variant == "baseline":
+                restores.append((H, "HINTS_ENABLED",
+                                 _set(H, "HINTS_ENABLED", False)))
+            elif variant == "moe_hints":
+                restores.append((H, "HINTS_ENABLED",
+                                 _set(H, "HINTS_ENABLED", True)))
+            elif variant == "no_remat":
+                kw = {"remat": False}
+            elif variant == "accum4":
+                kw = {"accum_steps": 4}
+            else:
+                raise ValueError(variant)
+        elif pair == "B":        # llama decode
+            arch, shape = "llama3-8b", "decode_32k"
+            if variant == "baseline":
+                kw = {"cache_profile": "tp"}
+            elif variant == "dp_cache":
+                kw = {"cache_profile": "dp-cache"}
+            elif variant == "seq_cache":
+                kw = {"cache_profile": "seq"}
+            else:
+                raise ValueError(variant)
+        elif pair == "C":        # mamba prefill
+            arch, shape = "mamba2-370m", "prefill_32k"
+            if variant == "baseline":
+                pass
+            elif variant == "ssm_hints":
+                restores.append((H, "HINTS_ENABLED",
+                                 _set(H, "HINTS_ENABLED", True)))
+            elif variant == "no_hints":
+                restores.append((H, "HINTS_ENABLED",
+                                 _set(H, "HINTS_ENABLED", False)))
+            elif variant == "ssd_bf16":
+                restores.append((SSM, "SSD_COMPUTE_DTYPE",
+                                 _set(SSM, "SSD_COMPUTE_DTYPE",
+                                      jnp.bfloat16)))
+            elif variant.startswith("chunk"):
+                # handled through a registered temp config below
+                import dataclasses
+                import repro.configs.base as base
+                from repro.configs.base import get_config
+                cfg = get_config(arch)
+                new_chunk = int(variant.split("_")[1])
+                tmp = dataclasses.replace(cfg, ssm_chunk=new_chunk,
+                                          name=f"mamba2-370m-c{new_chunk}")
+                base.register(tmp)
+                arch = tmp.name
+            elif variant == "ssd_bf16_chunk_128":
+                import dataclasses
+                import repro.configs.base as base
+                from repro.configs.base import get_config
+                restores.append((SSM, "SSD_COMPUTE_DTYPE",
+                                 _set(SSM, "SSD_COMPUTE_DTYPE",
+                                      jnp.bfloat16)))
+                cfg = get_config(arch)
+                tmp = dataclasses.replace(cfg, ssm_chunk=128,
+                                          name="mamba2-370m-bf16c128")
+                base.register(tmp)
+                arch = tmp.name
+            else:
+                raise ValueError(variant)
+        else:
+            raise ValueError(pair)
+        res = roofline_pair(arch, shape, mesh, **kw)
+        res["pair"] = pair
+        res["variant"] = variant
+        return res
+    finally:
+        for obj, attr, old in restores:
+            setattr(obj, attr, old)
+
+
+VARIANTS = {
+    "A": ["baseline", "moe_hints", "no_remat", "accum4"],
+    "B": ["baseline", "dp_cache", "seq_cache"],
+    "C": ["no_hints", "ssm_hints", "chunk_128", "ssd_bf16_chunk_128"],
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", default=None, choices=["A", "B", "C"])
+    ap.add_argument("--variant", default=None)
+    args = ap.parse_args(argv)
+    mesh = make_production_mesh()
+    pairs = [args.pair] if args.pair else ["A", "B", "C"]
+    out_path = os.path.join(RESULTS_DIR, "perf_iterations.json")
+    results = []
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            results = json.load(f)
+    for p in pairs:
+        variants = [args.variant] if args.variant else VARIANTS[p]
+        for v in variants:
+            print(f"=== pair {p} variant {v} ===", flush=True)
+            try:
+                res = run_variant(p, v, mesh)
+            except Exception as e:
+                print(f"FAILED: {e}", flush=True)
+                res = {"pair": p, "variant": v, "error": str(e)}
+            results = [r for r in results
+                       if not (r.get("pair") == p
+                               and r.get("variant") == v)] + [res]
+            with open(out_path, "w") as f:
+                json.dump(results, f, indent=1, default=float)
+    print(f"wrote {out_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

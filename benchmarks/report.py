@@ -1,0 +1,99 @@
+"""Render results/*.json into the markdown tables used by EXPERIMENTS.md.
+
+  PYTHONPATH=src python -m benchmarks.report [--out results/tables.md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def _load(name):
+    path = os.path.join(RESULTS, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _fmt_bytes(b):
+    if b >= 2 ** 30:
+        return f"{b / 2**30:.2f} GiB"
+    if b >= 2 ** 20:
+        return f"{b / 2**20:.1f} MiB"
+    return f"{b / 2**10:.0f} KiB"
+
+
+def dryrun_table(rows, title) -> str:
+    out = [f"### {title}", "",
+           "| arch | shape | compile | args/dev | temp/dev | collectives "
+           "(compiled HLO) |",
+           "|---|---|---:|---:|---:|---|"]
+    for r in rows:
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | FAILED | | | "
+                       f"{r['error'][:60]} |")
+            continue
+        m = r["memory"]
+        per = r["collectives"]["per_op"]
+        cs = ", ".join(f"{k.replace('collective-','c-')}×{v['count']}"
+                       for k, v in sorted(per.items()))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compile_s']:.0f}s | "
+            f"{_fmt_bytes(m['argument_bytes'])} | "
+            f"{_fmt_bytes(m['temp_bytes'])} | {cs or '—'} |")
+    return "\n".join(out) + "\n"
+
+
+def roofline_table(rows) -> str:
+    out = ["| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+           "bottleneck | MODEL/HLO FLOPs |",
+           "|---|---|---:|---:|---:|---|---:|"]
+    for r in rows:
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | | | | ERROR | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.2f} | "
+            f"{r['t_memory']*1e3:.2f} | {r['t_collective']*1e3:.2f} | "
+            f"{r['bottleneck'].replace('t_','')} | "
+            f"{r['useful_ratio']:.2f} |")
+    return "\n".join(out) + "\n"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(RESULTS, "tables.md"))
+    args = ap.parse_args(argv)
+    parts = []
+    sp = _load("dryrun_single_pod.json")
+    mp = _load("dryrun_multi_pod.json")
+    rl = _load("roofline_single_pod.json")
+    rlo = _load("roofline_single_pod_optimized.json")
+    if sp:
+        ok = sum(1 for r in sp if "error" not in r)
+        parts.append(f"## Dry-run — single pod 16×16 ({ok}/{len(sp)} OK)\n")
+        parts.append(dryrun_table(sp, "single-pod (256 chips)"))
+    if mp:
+        ok = sum(1 for r in mp if "error" not in r)
+        parts.append(f"## Dry-run — multi-pod 2×16×16 ({ok}/{len(mp)} OK)\n")
+        parts.append(dryrun_table(mp, "multi-pod (512 chips)"))
+    if rl:
+        parts.append("## Roofline (baseline) — single pod, per-layer-"
+                     "extrapolated unrolled HLO\n")
+        parts.append(roofline_table(rl))
+    if rlo:
+        parts.append("## Roofline (optimized — after §Perf iterations)\n")
+        parts.append(roofline_table(rlo))
+    txt = "\n".join(parts)
+    with open(args.out, "w") as f:
+        f.write(txt)
+    print(f"wrote {args.out} ({len(txt)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Benchmark driver: one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--skip-roofline]
+
+Paper-artifact map (DESIGN.md §6):
+  Fig. 2  → bench_compression     Fig. 6  → bench_dre
+  Fig. 8  → bench_cost            Fig. 9  → bench_qps
+  Fig. 10 → bench_scaling         Table 3 → bench_caching
+  Alg. 2  → bench_invocation      kernels → bench_kernels
+  §Roofline → roofline (subprocess: needs 512 XLA host devices before
+              jax init, so it cannot share this interpreter)
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full-size runs (default: quick)")
+    ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    args = ap.parse_args(argv)
+    quick = not args.full
+
+    from benchmarks import (bench_ablations, bench_baselines, bench_caching,
+                            bench_compression, bench_cost, bench_dre,
+                            bench_invocation, bench_kernels, bench_kv_quant,
+                            bench_qps, bench_recall, bench_scaling)
+    suite = {
+        "compression": bench_compression,
+        "invocation": bench_invocation,
+        "dre": bench_dre,
+        "cost": bench_cost,
+        "kernels": bench_kernels,
+        "recall": bench_recall,
+        "qps": bench_qps,
+        "scaling": bench_scaling,
+        "caching": bench_caching,
+        "baselines": bench_baselines,
+        "ablations": bench_ablations,
+        "kv_quant": bench_kv_quant,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    failures = []
+    t_start = time.time()
+    for name, mod in suite.items():
+        if only and name not in only:
+            continue
+        try:
+            mod.run(quick=quick)
+        except Exception as e:
+            print(f"[bench:{name}] FAILED: {type(e).__name__}: {e}")
+            failures.append(name)
+    if not args.skip_roofline and (only is None or "roofline" in only):
+        print("\n" + "=" * 72 + "\nRoofline (subprocess, 512 host devices)\n"
+              + "=" * 72)
+        cmd = [sys.executable, "-m", "benchmarks.roofline",
+               "--json", "roofline_quick.json"]
+        env = dict(os.environ)
+        env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+        rc = subprocess.call(cmd, env=env)
+        if rc != 0:
+            failures.append("roofline")
+    dt = time.time() - t_start
+    print(f"\n[benchmarks] done in {dt:.0f}s; "
+          f"{'ALL OK' if not failures else 'FAILURES: ' + ','.join(failures)}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,87 @@
+"""RAG-style serving: LM embeddings → SQUASH hybrid retrieval → generation.
+
+    PYTHONPATH=src python examples/rag_serving.py
+
+The integration showcase (DESIGN.md §4.i–ii): a small decoder LM (reduced
+qwen2-vl text path) produces document embeddings from its final hidden
+state; SQUASH indexes them with attributes; queries retrieve filtered
+neighbors; the LM then "generates" continuations with batched requests
+through the serving engine — including the OSQ-quantized KV cache option
+(the paper's quantization technique applied to the serving substrate).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core.attributes import Predicate
+from repro.core.pipeline import SquashConfig, SquashIndex
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.serve import Engine, ServeConfig, cache_bytes, quantize_caches
+
+N_DOCS, DOC_LEN, K = 512, 24, 5
+GEN_LEN = 24
+
+
+def embed_documents(params, cfg, tokens):
+    """Mean-pooled final hidden state (pre-logits) as the doc embedding."""
+    # reuse forward pieces: embed → blocks → final norm
+    x = L.embed(params["embed"], tokens)
+    b, s = x.shape[:2]
+    positions = T.make_positions(b, s)
+
+    def body(carry, lp):
+        y, _ = T.block_train(lp, carry, positions, cfg)
+        return y, None
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return np.asarray(x.mean(axis=1), dtype=np.float32)
+
+
+def main():
+    cfg = get_config("phi4-mini-3.8b").reduced(vocab_size=1024, d_model=128,
+                                               num_layers=2)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+
+    print(f"embedding {N_DOCS} documents with the LM...")
+    docs = rng.integers(0, cfg.vocab_size, (N_DOCS, DOC_LEN), dtype=np.int32)
+    embs = embed_documents(params, cfg, jnp.asarray(docs))
+
+    print("indexing embeddings + attributes with SQUASH...")
+    attrs = rng.integers(0, 16, (N_DOCS, 4)).astype(np.float64)
+    idx = SquashIndex.build(embs, attrs, SquashConfig(
+        num_partitions=4, min_hamming_keep=32))
+
+    print("hybrid retrieval (category < 8, freshness >= 4)...")
+    preds = [Predicate(attr=0, op="<", lo=8), Predicate(attr=1, op=">=", lo=4)]
+    queries = embs[:4] + rng.normal(0, 0.01, (4, embs.shape[1])).astype(
+        np.float32)
+    ids, dists, _ = idx.search(queries, preds, k=K)
+    print(f"  retrieved ids: {ids[:, :3].tolist()}")
+
+    print("generating with retrieved context (batched serving)...")
+    prompts = np.stack([
+        np.concatenate([docs[i][:8] for i in ids_row[:2]])
+        for ids_row in ids])
+    eng = Engine(cfg, params, ServeConfig(max_new_tokens=GEN_LEN))
+    out = eng.generate(prompts)
+    print(f"  generated {out.shape} tokens")
+
+    # OSQ-quantized KV: same outputs at 4x less cache traffic.
+    eng_q = Engine(cfg, params, ServeConfig(max_new_tokens=GEN_LEN, kv_bits=8))
+    out_q = eng_q.generate(prompts)
+    _, caches = T.prefill(params, jnp.asarray(prompts), cfg,
+                          buf_len=prompts.shape[1] + GEN_LEN)
+    qc, meta = quantize_caches(caches, 8)
+    ratio = cache_bytes(caches) / cache_bytes(qc)
+    agree = float((out == out_q).mean())
+    print(f"  OSQ-KV(8-bit): cache {ratio:.1f}x smaller, "
+          f"token agreement {agree:.0%}")
+    assert agree >= 0.75
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""End-to-end serverless hybrid search driver (the paper's system, simulated).
+
+    PYTHONPATH=src python examples/serverless_search.py
+
+Drives batched hybrid queries through the full SQUASH runtime:
+
+  Coordinator → tree-based QA invocation (Alg. 2) → per-QA attribute
+  filtering + Alg. 1 partition selection → QP shard search on a jax mesh
+  (the QP plane: partitions over the 'model' axis, queries over 'data') →
+  single-pass top-k merge → DRE warm-container accounting → §3.5 cost model.
+
+Prints recall, simulated serverless latency/QPS, and dollars per 1k queries.
+"""
+
+import time
+
+import numpy as np
+
+from repro.core.cost_model import LambdaFleet, squash_query_cost
+from repro.core.distributed import distributed_search
+from repro.core.dre import ContainerPool
+from repro.core.invocation import InvocationSim, tree_size
+from repro.core.pipeline import SquashConfig, SquashIndex
+from repro.data.synthetic import (default_predicates, ground_truth,
+                                  make_vector_dataset)
+
+N_QA_F, N_QA_L = 4, 3          # F=4, l_max=3 → N_QA = 84 (paper sweet spot)
+
+
+def main():
+    ds = make_vector_dataset("sift1m", scale=0.02, num_queries=50)
+    preds = default_predicates(ds.attr_cardinality)
+    idx = SquashIndex.build(ds.vectors, ds.attributes,
+                            SquashConfig(num_partitions=10))
+
+    # --- QP plane: mesh-sharded search (1 real device here; the same code
+    # lowers onto the 16×16 production mesh in launch/dryrun.py) ----------
+    t0 = time.perf_counter()
+    ids, dists = distributed_search(idx, ds.queries, preds, k=10)
+    t_search = time.perf_counter() - t0
+    gt_ids, _ = ground_truth(ds, preds, k=10)
+    hits = sum(len(set(ids[i]) & set(gt_ids[i])) for i in range(len(ids)))
+    recall = hits / gt_ids.size
+
+    # --- control plane: Alg. 2 invocation + DRE + cost -------------------
+    n_qa = tree_size(N_QA_F, N_QA_L)
+    sim = InvocationSim(branching=N_QA_F, max_level=N_QA_L, node_compute=0.02)
+    t_tree = sim.makespan()
+    # one warm pool per QP function (squash-processor-<pid>), as in §3.2
+    pools = [ContainerPool(warm_prob=0.95, seed=pid) for pid in range(10)]
+    for wave in range(3):                       # 3 successive batches
+        for pid, pool in enumerate(pools):
+            pool.invoke(f"sift1m/part{pid}", 35_000_000, use_dre=True)
+    qps = ds.queries.shape[0] / (t_tree + t_search / 10)  # 10 parallel QPs
+    s3_gets = sum(p.stats.s3_gets for p in pools)
+    dre_hits = sum(p.stats.dre_hits for p in pools)
+    invocations = sum(p.stats.invocations for p in pools)
+    fleet = LambdaFleet(n_qa=n_qa, n_qp=10 * 3,
+                        t_qa_s=n_qa * 0.3, t_qp_s=30 * t_search / 10,
+                        t_co_s=t_tree,
+                        s3_gets=s3_gets,
+                        efs_read_bytes=int(50 * 2 * 10 * ds.d * 4))
+    cost = squash_query_cost(fleet)
+
+    print(f"recall@10           = {recall:.3f}")
+    print(f"tree launch (84 QA) = {t_tree * 1e3:.0f} ms")
+    print(f"mesh search         = {t_search * 1e3:.0f} ms "
+          f"({ds.queries.shape[0]} queries)")
+    print(f"simulated QPS       = {qps:.0f}")
+    print(f"DRE                 : {s3_gets} S3 GETs for "
+          f"{invocations} invocations ({dre_hits} warm-container hits)")
+    print(f"cost per 1k queries = ${cost['total'] * 1000 / 50:.4f} "
+          f"(λ-runtime {cost['lambda_runtime'] / cost['total']:.0%})")
+    assert recall >= 0.9
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Train a tiny LM end-to-end with the training substrate.
+
+    PYTHONPATH=src python examples/train_tiny_lm.py [--steps N]
+
+Uses the llama3 block wiring at toy scale (~4M params), AdamW + cosine
+schedule + grad clipping + grad accumulation, deterministic synthetic data
+with a learnable bigram structure so the loss provably drops, and a
+checkpoint save/restore round-trip at the end.
+"""
+
+import argparse
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore_pytree, save_pytree
+from repro.configs.base import get_config
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_init, cosine_schedule
+from repro.train import make_train_step
+
+
+def make_batch(rng, b, s, vocab):
+    """Markov bigram stream: next ≡ (5·tok + 1) mod vocab with 10% noise."""
+    first = rng.integers(0, vocab, (b, 1), dtype=np.int32)
+    toks = [first]
+    for _ in range(s):
+        nxt = (5 * toks[-1] + 1) % vocab
+        noise = rng.random((b, 1)) < 0.1
+        rnd = rng.integers(0, vocab, (b, 1), dtype=np.int32)
+        toks.append(np.where(noise, rnd, nxt).astype(np.int32))
+    return {"tokens": jnp.asarray(np.concatenate(toks, axis=1))}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+
+    cfg = get_config("llama3-8b").reduced(
+        num_layers=2, d_model=128, d_ff=256, vocab_size=256)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"model: {n_params / 1e6:.1f}M params "
+          f"({cfg.num_layers}L d={cfg.d_model})")
+
+    opt_cfg = AdamWConfig(lr=3e-3, weight_decay=0.01)
+    sched = cosine_schedule(3e-3, warmup=10, total=args.steps)
+    state = adamw_init(params, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg, sched, accum_steps=2))
+
+    rng = np.random.default_rng(0)
+    losses = []
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = make_batch(rng, b=8, s=64, vocab=cfg.vocab_size)
+        params, state, m = step(params, state, batch)
+        losses.append(float(m["loss"]))
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"  step {i:4d}  loss {losses[-1]:.3f}  "
+                  f"lr {float(m['lr']):.2e}  |g| {float(m['grad_norm']):.2f}")
+    dt = time.time() - t0
+    print(f"trained {args.steps} steps in {dt:.0f}s "
+          f"({8 * 64 * args.steps / dt:.0f} tok/s)")
+    assert losses[-1] < losses[0] * 0.7, "loss must drop"
+
+    with tempfile.TemporaryDirectory() as d:
+        save_pytree({"params": params, "opt": state}, d)
+        restored = restore_pytree({"params": params, "opt": state}, d)
+        same = all(bool(jnp.array_equal(a, b)) for a, b in zip(
+            jax.tree_util.tree_leaves(params),
+            jax.tree_util.tree_leaves(restored["params"])))
+        print(f"checkpoint round-trip: {'OK' if same else 'FAILED'}")
+        assert same
+
+
+if __name__ == "__main__":
+    main()

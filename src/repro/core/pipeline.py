@@ -1,0 +1,290 @@
+"""SQUASH multi-stage search pipeline (paper §2.4, Fig. 4 + Fig. 5 data plane).
+
+Build: balanced partitions → per-partition KLT → variance-greedy bit
+allocation → Lloyd-Max scalar quantizers → segment-packed primary OSQ index +
+1-bit low-bit OSQ index → quantized attribute index.
+
+Search: predicate parse → R lookup → filter mask F → Algorithm 1 partition
+selection → per-partition: low-bit Hamming prune → ADC lookup-table LB
+distances → optional R·k full-precision post-refinement → single-pass
+MPI-style top-k merge.
+
+This module is the single-host reference engine (NumPy build + jnp query
+math); ``repro.core.distributed`` shards the same stages over a TPU mesh and
+``repro.serve`` drives it under the simulated serverless runtime.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import adc, attributes as attr_mod, lowbit, osq, partitions, segments
+
+__all__ = ["SquashConfig", "PartitionIndex", "SquashIndex", "SearchStats"]
+
+
+@dataclasses.dataclass
+class SquashConfig:
+    """Index + search hyper-parameters (paper §5.1/§5.3 defaults)."""
+
+    num_partitions: int = 10
+    bits_per_dim: float = 4.0          # bit budget b = bits_per_dim * d
+    segment_bits: int = 8              # S
+    use_klt: bool = True               # unitary decorrelating transform
+    hamming_perc: float = 10.0         # H_perc — % of candidates kept
+    refine_ratio: float = 2.0          # R — full-precision re-rank multiplier
+    beta: float = 0.001                # Eq. 1 β
+    threshold_override: Optional[float] = None
+    kmeans_iters: int = 10
+    lloyd_iters: int = 15
+    max_bits_per_dim: int = 12
+    enable_refine: bool = True
+    min_hamming_keep: int = 64         # floor so tiny candidate sets survive
+
+
+@dataclasses.dataclass
+class PartitionIndex:
+    """Per-partition OSQ index — what one QueryProcessor holds (paper §3.1)."""
+
+    vector_ids: np.ndarray           # (n_p,) global ids, local order
+    klt: Optional[np.ndarray]        # (d, d) unitary transform (or None)
+    mean: np.ndarray                 # (d,) transform centering
+    quant: osq.OSQQuantizer
+    layout: segments.SegmentLayout
+    packed: np.ndarray               # (n_p, G) packed primary codes
+    codes: np.ndarray                # (n_p, d) unpacked codes (in-memory Q-index)
+    low: lowbit.LowBitIndex          # 1-bit secondary index
+    vectors: np.ndarray              # (n_p, d) full precision (the 'EFS' copy)
+
+    @property
+    def size(self) -> int:
+        return int(self.vector_ids.shape[0])
+
+    def transform(self, q: np.ndarray) -> np.ndarray:
+        q = q - self.mean
+        return q @ self.klt if self.klt is not None else q
+
+    def index_bytes(self) -> int:
+        return int(self.packed.nbytes + self.low.packed.nbytes)
+
+
+@dataclasses.dataclass
+class SearchStats:
+    """Per-stage pruning accounting (drives the cost model + EXPERIMENTS.md)."""
+
+    queries: int = 0
+    filter_pass: int = 0
+    partitions_visited: int = 0
+    hamming_in: int = 0
+    hamming_kept: int = 0
+    adc_evals: int = 0
+    refined: int = 0
+
+    def merge(self, other: "SearchStats") -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+
+
+class SquashIndex:
+    """End-to-end SQUASH index over a vector dataset + attribute table."""
+
+    def __init__(
+        self,
+        config: SquashConfig,
+        partitioning: partitions.Partitioning,
+        parts: List[PartitionIndex],
+        attr_index: attr_mod.AttributeIndex,
+        dim: int,
+    ):
+        self.config = config
+        self.partitioning = partitioning
+        self.parts = parts
+        self.attr_index = attr_index
+        self.dim = dim
+
+    # ------------------------------------------------------------------ build
+
+    @classmethod
+    def build(
+        cls,
+        vectors: np.ndarray,
+        attrs: np.ndarray,
+        config: Optional[SquashConfig] = None,
+        attr_bits: Optional[Sequence[int]] = None,
+        seed: int = 0,
+    ) -> "SquashIndex":
+        config = config or SquashConfig()
+        vectors = np.asarray(vectors, dtype=np.float64)
+        n, d = vectors.shape
+        cent, assign = partitions.balanced_kmeans(
+            vectors, config.num_partitions, iters=config.kmeans_iters, seed=seed
+        )
+        t = (
+            config.threshold_override
+            if config.threshold_override is not None
+            else partitions.compute_threshold(vectors, cent, assign, beta=config.beta)
+        )
+        part_obj = partitions.Partitioning(centroids=cent, assign=assign, threshold=t)
+        budget = int(round(config.bits_per_dim * d))
+        parts: List[PartitionIndex] = []
+        for pid in range(config.num_partitions):
+            ids = np.where(assign == pid)[0]
+            x = vectors[ids]
+            mean = x.mean(axis=0)
+            xc = x - mean
+            if config.use_klt and x.shape[0] > d:
+                cov = (xc.T @ xc) / max(x.shape[0] - 1, 1)
+                _, eigvec = np.linalg.eigh(cov)
+                klt = eigvec[:, ::-1]            # descending-variance order
+                xt = xc @ klt
+            else:
+                klt = None
+                xt = xc
+            var = xt.var(axis=0)
+            bits = osq.allocate_bits(var, budget, max_bits=config.max_bits_per_dim)
+            quant = osq.design_quantizers(xt, bits, iters=config.lloyd_iters)
+            codes = osq.encode(quant, xt)
+            layout = segments.build_layout(bits, seg_bits=config.segment_bits)
+            packed = segments.pack_codes(layout, codes)
+            # Low-bit index binarizes the *raw* (centered) space: KLT compacts
+            # energy into few dims, and post-KLT standardization would amplify
+            # the near-noise trailing dims into uninformative random bits.
+            low = lowbit.build_lowbit_index(xc)
+            parts.append(
+                PartitionIndex(
+                    vector_ids=ids,
+                    klt=klt,
+                    mean=mean,
+                    quant=quant,
+                    layout=layout,
+                    packed=packed,
+                    codes=codes.astype(np.int32),
+                    low=low,
+                    vectors=x,
+                )
+            )
+        attr_index = attr_mod.build_attribute_index(attrs, bits=attr_bits)
+        return cls(config, part_obj, parts, attr_index, dim=d)
+
+    # ----------------------------------------------------------------- search
+
+    def search(
+        self,
+        queries: np.ndarray,
+        predicates: Sequence[attr_mod.Predicate],
+        k: int = 10,
+        collect_stats: bool = False,
+    ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
+        """Batched hybrid top-k. Returns (ids (Q,k), dists (Q,k), stats)."""
+        queries = np.atleast_2d(np.asarray(queries, dtype=np.float64))
+        qn = queries.shape[0]
+        stats = SearchStats(queries=qn)
+
+        # Stage 1 — attribute filtering (global mask F per query).
+        r = attr_mod.build_r_lookup(self.attr_index, predicates)
+        f_one = np.asarray(attr_mod.filter_mask(r, self.attr_index.codes))
+        f = np.broadcast_to(f_one, (qn, f_one.shape[0]))
+        stats.filter_pass += int(f_one.sum()) * qn
+
+        # Stage 2 — Algorithm 1 partition ranking/selection.
+        visit, cands = partitions.select_partitions(
+            queries,
+            self.partitioning.centroids,
+            f,
+            self.partitioning.assign,
+            self.partitioning.threshold,
+            k,
+        )
+        stats.partitions_visited += int(visit.sum())
+
+        all_ids = np.full((qn, k), -1, dtype=np.int64)
+        all_dists = np.full((qn, k), np.inf, dtype=np.float64)
+        for qi in range(qn):
+            heap: List[Tuple[float, int]] = []
+            for pid, local_rows in cands[qi].items():
+                ids, dists = self._search_partition(
+                    self.parts[pid], queries[qi], local_rows, k, stats
+                )
+                heap.extend(zip(dists.tolist(), ids.tolist()))
+            # Single-pass MPI-style reduce: merge per-partition local top-k.
+            heap.sort()
+            top = heap[:k]
+            for r_i, (dist, vid) in enumerate(top):
+                all_ids[qi, r_i] = vid
+                all_dists[qi, r_i] = dist
+        return all_ids, all_dists, stats
+
+    def _search_partition(
+        self,
+        part: PartitionIndex,
+        query: np.ndarray,
+        local_rows: np.ndarray,
+        k: int,
+        stats: SearchStats,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        cfg = self.config
+        qt = part.transform(query)
+
+        # Stage 3 — low-bit OSQ Hamming pruning (only rows passing the filter).
+        # Binary codes live in the raw centered space (see build()).
+        qbits = part.low.encode_queries((query - part.mean)[None, :])[0]
+        cand_packed = part.low.packed[local_rows]
+        x = np.bitwise_xor(cand_packed, qbits[None, :])
+        ham = _popcount_u32(x).sum(axis=1)
+        stats.hamming_in += local_rows.size
+        keep = max(
+            min(cfg.min_hamming_keep, local_rows.size),
+            int(np.ceil(local_rows.size * cfg.hamming_perc / 100.0)),
+        )
+        keep = min(keep, local_rows.size)
+        kept_sel = np.argpartition(ham, keep - 1)[:keep]
+        kept_rows = local_rows[kept_sel]
+        stats.hamming_kept += keep
+
+        # Stage 4 — ADC lookup-table LB distances on survivors.
+        table = adc.build_adc_table(qt, part.quant.boundaries, part.quant.cells)
+        codes = part.codes[kept_rows]
+        safe = np.where(np.isfinite(table), table, 0.0)
+        lb = np.sqrt(safe[codes, np.arange(self.dim)[None, :]].sum(axis=1))
+        stats.adc_evals += keep
+
+        take = min(int(np.ceil(cfg.refine_ratio * k)), keep) if cfg.enable_refine \
+            else min(k, keep)
+        order = np.argpartition(lb, take - 1)[:take]
+        order = order[np.argsort(lb[order])]
+        cand = kept_rows[order]
+
+        if cfg.enable_refine:
+            # Stage 5 — post-refinement on full-precision rows ('EFS' reads).
+            full = part.vectors[cand]
+            exact = np.sqrt(((full - query[None, :]) ** 2).sum(axis=1))
+            stats.refined += cand.size
+            fin = np.argsort(exact)[:k]
+            return part.vector_ids[cand[fin]], exact[fin]
+        return part.vector_ids[cand[:k]], lb[order][:k]
+
+    # ------------------------------------------------------------- accounting
+
+    def index_bytes(self) -> Dict[str, int]:
+        primary = sum(p.packed.nbytes for p in self.parts)
+        low = sum(p.low.packed.nbytes for p in self.parts)
+        attrs = self.attr_index.codes.nbytes
+        full = sum(p.vectors.nbytes for p in self.parts)
+        return {
+            "primary_osq": int(primary),
+            "lowbit_osq": int(low),
+            "attr_codes": int(attrs),
+            "full_precision": int(full),
+        }
+
+
+_POP_TABLE = np.array([bin(i).count("1") for i in range(256)], dtype=np.uint8)
+
+
+def _popcount_u32(x: np.ndarray) -> np.ndarray:
+    """Byte-table popcount for uint32 arrays (NumPy reference path)."""
+    b = x.view(np.uint8).reshape(*x.shape, 4)
+    return _POP_TABLE[b].sum(axis=-1).astype(np.int32)

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: packed binary Hamming distance (paper §2.4.3).
+
+XOR + popcount over uint32 segment words — 32 dimensions per VPU lane. The
+query's packed words are tiny and broadcast to every grid step; the database
+is BlockSpec-tiled over rows so each block's codes stream HBM→VMEM once.
+
+Target: TPU (VPU popcount); validated on CPU via ``interpret=True``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["hamming_kernel", "packed_hamming"]
+
+BLOCK_N = 512  # rows per grid step; G (words/row) rides along un-tiled.
+
+
+def hamming_kernel(q_ref, db_ref, out_ref):
+    """One block: (BLOCK_N, G) uint32 codes vs (1, G) query → (BLOCK_N,) i32."""
+    q = q_ref[...]                       # (1, G)
+    db = db_ref[...]                     # (BLOCK_N, G)
+    x = jnp.bitwise_xor(db, q)           # broadcast over rows
+    pc = jax.lax.population_count(x).astype(jnp.int32)
+    out_ref[...] = jnp.sum(pc, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
+def packed_hamming(q_packed, db_packed, *, interpret: bool = False,
+                   block_n: int = BLOCK_N):
+    """Hamming distances between one packed query and all packed rows.
+
+    Args:
+      q_packed: (G,) uint32 packed query bits.
+      db_packed: (N, G) uint32 packed database bits (N padded internally).
+    Returns:
+      (N,) int32 distances.
+    """
+    n, g = db_packed.shape
+    bn = min(block_n, max(int(n), 1))
+    pad = (-n) % bn
+    if pad:
+        db_packed = jnp.pad(db_packed, ((0, pad), (0, 0)))
+    grid = (db_packed.shape[0] // bn,)
+    out = pl.pallas_call(
+        hamming_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g), lambda i: (0, 0)),      # query: replicated
+            pl.BlockSpec((bn, g), lambda i: (i, 0)),     # db rows: tiled
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((db_packed.shape[0],), jnp.int32),
+        interpret=interpret,
+    )(q_packed[None, :], db_packed)
+    return out[:n]

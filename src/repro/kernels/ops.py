@@ -1,0 +1,54 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On a real TPU these dispatch compiled kernels; on CPU (this container) they
+run the same kernel bodies under ``interpret=True``. The switch is automatic
+from the backend, overridable for tests.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.core.segments import SegmentLayout
+from repro.kernels import adc_lookup, bitpack, hamming
+
+__all__ = ["hamming_distances", "adc_distances", "extract_codes",
+           "ssd_intra"]
+
+
+def _interpret(override: Optional[bool]) -> bool:
+    if override is not None:
+        return override
+    return jax.default_backend() != "tpu"
+
+
+def hamming_distances(q_packed, db_packed, *, interpret: Optional[bool] = None):
+    """(G,) uint32 query vs (N, G) uint32 rows → (N,) int32 Hamming."""
+    return hamming.packed_hamming(
+        q_packed, db_packed, interpret=_interpret(interpret)
+    )
+
+
+def adc_distances(table, codes, *, sqrt: bool = True,
+                  interpret: Optional[bool] = None):
+    """(M+1, d) table + (N, d) codes → (N,) LB distances."""
+    return adc_lookup.adc_lb_distances(
+        table, codes, sqrt=sqrt, interpret=_interpret(interpret)
+    )
+
+
+def extract_codes(segments, layout: SegmentLayout, *,
+                  interpret: Optional[bool] = None):
+    """(N, G) packed segments → (N, d) int32 codes."""
+    return bitpack.extract_codes(
+        segments, layout, interpret=_interpret(interpret)
+    )
+
+
+def ssd_intra(c_mat, b_mat, da, x, *, interpret: Optional[bool] = None):
+    """(G,lc,N)/(G,lc,N)/(G,H,lc)/(G,H,lc,P) → (G,H,lc,P) SSD intra-chunk."""
+    from repro.kernels import ssd
+    return ssd.ssd_intra_block(c_mat, b_mat, da, x,
+                               interpret=_interpret(interpret))

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.segments import SegmentLayout, extract_all
+
+__all__ = ["hamming_ref", "adc_lb_ref", "extract_ref", "ssd_intra_ref"]
+
+
+def hamming_ref(q_packed, db_packed):
+    """Oracle for kernels.hamming.packed_hamming."""
+    x = jnp.bitwise_xor(db_packed, q_packed[None, :])
+    return jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+
+
+def adc_lb_ref(table, codes, sqrt: bool = True):
+    """Oracle for kernels.adc_lookup.adc_lb_distances (gather formulation)."""
+    t = jnp.asarray(table, dtype=jnp.float32)
+    c = jnp.asarray(codes)
+    picked = t[c, jnp.arange(c.shape[1])[None, :]]
+    s = jnp.sum(picked, axis=-1)
+    return jnp.sqrt(s) if sqrt else s
+
+
+def extract_ref(segments, layout: SegmentLayout):
+    """Oracle for kernels.bitpack.extract_codes."""
+    return extract_all(segments, layout)
+
+
+def ssd_intra_ref(c_mat, b_mat, da, x):
+    """jnp oracle for the SSD intra-chunk block (see kernels/ssd.py).
+
+    c_mat/b_mat: (G, lc, N); da: (G, H, lc); x: (G, H, lc, P)
+    → (G, H, lc, P).
+    """
+    cs = jnp.cumsum(da, axis=-1)                       # (G, H, lc)
+    diff = cs[..., :, None] - cs[..., None, :]         # (G, H, lc, lc)
+    lc = da.shape[-1]
+    ii = jnp.arange(lc)
+    tri = ii[:, None] >= ii[None, :]
+    decay = jnp.where(tri, jnp.exp(jnp.where(tri, diff, 0.0)), 0.0)
+    scores = jnp.einsum("gln,gsn->gls", c_mat, b_mat)  # (G, lc, lc)
+    return jnp.einsum("gls,ghls,ghsp->ghlp", scores, decay, x)

@@ -1,0 +1,289 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) pair.
+
+The FIRST TWO LINES request 512 XLA host devices — they must run before any
+other import (jax locks device count on first init). Do NOT replicate this
+flag anywhere global; smoke tests and benches see the single real device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out]
+
+For each pair this lowers the right step function (train_step / prefill_step /
+serve_step per DESIGN.md §4), compiles it for the production mesh, and
+reports memory_analysis + cost_analysis + a collective-bytes breakdown parsed
+from the compiled HLO — the inputs to EXPERIMENTS.md §Dry-run/§Roofline.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (INPUT_SHAPES, ArchConfig, InputShape,
+                                get_config, list_configs)
+from repro.launch.mesh import HW, batch_axes, make_production_mesh
+from repro.launch import shardings as SH
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_init
+from repro.train import make_train_step
+
+__all__ = ["input_specs", "arch_for_shape", "lower_pair", "dryrun_pair",
+           "collective_bytes", "run_all"]
+
+# Pure full-attention archs get a documented sliding-window serving variant
+# for long_500k (sub-quadratic rule, DESIGN.md §4); SSM/hybrid/local:global
+# run natively.
+LONG_WINDOW = 8192
+_NATIVE_LONG = {"mamba2-370m", "zamba2-7b", "gemma3-4b"}
+
+
+def arch_for_shape(name: str, shape: InputShape) -> ArchConfig:
+    cfg = get_config(name)
+    if shape.name == "long_500k" and name not in _NATIVE_LONG:
+        cfg = dataclasses.replace(cfg, attention="sliding",
+                                  sliding_window=LONG_WINDOW)
+    return cfg
+
+
+def _token_sds(cfg: ArchConfig, batch: int, seq: int):
+    if cfg.num_codebooks:
+        return jax.ShapeDtypeStruct((batch, cfg.num_codebooks, seq),
+                                    jnp.int32)
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape,
+                param_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.mode == "train":
+        batch = {"tokens": _token_sds(cfg, b, s + 1)}
+        if cfg.mrope:
+            batch["embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vlm_num_patches, cfg.d_model), jnp.float32)
+        return {"batch": batch}
+    if shape.mode == "prefill":
+        out = {"tokens": _token_sds(cfg, b, s)}
+        if cfg.mrope:
+            out["embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vlm_num_patches, cfg.d_model), jnp.float32)
+        return out
+    # decode: ONE new token against a seq_len cache
+    caches = jax.eval_shape(
+        lambda: T.init_decode_caches(cfg, b, s, dtype=param_dtype))
+    return {"tokens": _token_sds(cfg, b, 1), "caches": caches,
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def _param_sds(cfg: ArchConfig, dtype):
+    return jax.eval_shape(
+        lambda k: T.init_params(k, cfg, dtype=dtype),
+        jax.random.PRNGKey(0))
+
+
+def lower_pair(name: str, shape_name: str, *, multi_pod: bool = False,
+               mesh=None, param_dtype=jnp.bfloat16,
+               remat: bool = True, accum_steps: int = 1,
+               unroll: bool = False, cache_profile: str = "seq"):
+    """Lower one (arch × shape) for the production mesh. Returns lowered."""
+    shape = INPUT_SHAPES[shape_name]
+    cfg = arch_for_shape(name, shape)
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    params = _param_sds(cfg, param_dtype)
+    p_sh = SH.params_shardings(mesh, params)
+    specs = input_specs(cfg, shape, param_dtype)
+
+    if shape.mode == "train":
+        # bf16 moments for the 480B giant (DESIGN.md §4), fp32 otherwise.
+        state_dtype = jnp.bfloat16 if cfg.d_model >= 7168 else jnp.float32
+        opt_cfg = AdamWConfig(state_dtype=state_dtype)
+        opt = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params)
+        o_sh = SH.opt_shardings(mesh, opt)
+        b_sh = SH.batch_shardings(mesh, specs["batch"])
+        step = make_train_step(cfg, opt_cfg, remat=remat,
+                               accum_steps=accum_steps, unroll=unroll)
+        fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, None))
+        with mesh:
+            return fn.lower(params, opt, specs["batch"]), cfg, mesh
+
+    if shape.mode == "prefill":
+        b_sh = SH.batch_shardings(mesh, specs)
+        buf = shape.seq_len + (cfg.vlm_num_patches if cfg.mrope else 0)
+
+        def prefill_step(params, inputs):
+            return T.prefill(params, inputs["tokens"], cfg, buf_len=buf,
+                             embeds=inputs.get("embeds"), unroll=unroll)
+
+        fn = jax.jit(prefill_step, in_shardings=(p_sh, b_sh))
+        with mesh:
+            return fn.lower(params, specs), cfg, mesh
+
+    # decode
+    long_ctx = shape.name == "long_500k"
+    c_sh = SH.cache_shardings(mesh, specs["caches"], long_context=long_ctx,
+                              profile=cache_profile)
+    t_sh = SH.batch_shardings(mesh, {"t": specs["tokens"]})["t"]
+
+    def serve_step(params, tokens, caches, pos):
+        return T.decode_step(params, tokens, caches, pos, cfg,
+                             unroll=unroll)
+
+    fn = jax.jit(serve_step,
+                 in_shardings=(p_sh, t_sh, c_sh, NamedSharding(mesh, P())),
+                 out_shardings=(None, c_sh))
+    with mesh:
+        return fn.lower(params, specs["tokens"], specs["caches"],
+                        specs["pos"]), cfg, mesh
+
+
+_HLO_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+    r"(?:\()?([a-z][a-z0-9]*)\[([0-9,]*)\][^\s]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[\w.\-]*\(")
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Sum output-shape bytes of every collective op in compiled HLO.
+
+    NOTE: collectives inside un-unrolled while loops are counted once —
+    roofline runs use ``unroll=True`` so per-layer collectives all appear.
+    """
+    out: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        m = _HLO_OP_RE.match(line)
+        if not m:
+            continue
+        dt, dims, kind = m.group(1), m.group(2), m.group(3)
+        nel = int(np.prod([int(x) for x in dims.split(",") if x] or [1]))
+        nbytes = nel * _DTYPE_BYTES.get(dt, 4)
+        rec = out.setdefault(kind, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += nbytes
+    total = sum(v["bytes"] for v in out.values())
+    return {"per_op": out, "total_bytes": total}
+
+
+def dryrun_pair(name: str, shape_name: str, *, multi_pod: bool = False,
+                mesh=None, verbose: bool = True,
+                **kw) -> Dict[str, Any]:
+    t0 = time.time()
+    lowered, cfg, mesh = lower_pair(name, shape_name, multi_pod=multi_pod,
+                                    mesh=mesh, **kw)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    nchips = int(np.prod(list(mesh.shape.values())))
+    flops = float(cost.get("flops", 0.0))
+    bytes_hbm = float(cost.get("bytes accessed", 0.0))
+    result = {
+        "arch": name,
+        "shape": shape_name,
+        "mesh": dict(mesh.shape),
+        "chips": nchips,
+        "lower_s": round(t1 - t0, 1),
+        "compile_s": round(t2 - t1, 1),
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_hbm,
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes": (getattr(mem, "temp_size_in_bytes", 0)
+                           + getattr(mem, "argument_size_in_bytes", 0)),
+        },
+        # roofline terms (seconds) — single-chip share of the global work
+        "t_compute": flops / (nchips * HW.PEAK_BF16_FLOPS),
+        "t_memory": bytes_hbm / (nchips * HW.HBM_BW),
+        "t_collective": coll["total_bytes"] / (nchips * HW.ICI_BW),
+    }
+    terms = {k: result[k] for k in ("t_compute", "t_memory", "t_collective")}
+    result["bottleneck"] = max(terms, key=terms.get)
+    if verbose:
+        print(f"[dryrun] {name} × {shape_name} mesh={tuple(mesh.shape.values())} "
+              f"lower={result['lower_s']}s compile={result['compile_s']}s")
+        print(f"  FLOPs={flops:.3e}  bytes={bytes_hbm:.3e}  "
+              f"coll={coll['total_bytes']:.3e}B")
+        print(f"  t_comp={result['t_compute']*1e3:.2f}ms  "
+              f"t_mem={result['t_memory']*1e3:.2f}ms  "
+              f"t_coll={result['t_collective']*1e3:.2f}ms  "
+              f"→ {result['bottleneck']}")
+    return result
+
+
+def run_all(archs=None, shapes=None, *, multi_pod: bool = False,
+            json_path: Optional[str] = None, unroll: bool = False,
+            cache_profile: str = "seq") -> list:
+    archs = archs or list_configs()
+    shapes = shapes or list(INPUT_SHAPES)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    results = []
+    for a in archs:
+        for s in shapes:
+            try:
+                results.append(dryrun_pair(a, s, mesh=mesh, unroll=unroll,
+                                           cache_profile=cache_profile))
+            except Exception as e:  # a failure here is a bug in the system
+                print(f"[dryrun] FAILED {a} × {s}: {type(e).__name__}: {e}")
+                results.append({"arch": a, "shape": s, "error": str(e)})
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=1, default=float)
+    ok = sum(1 for r in results if "error" not in r)
+    print(f"[dryrun] {ok}/{len(results)} pairs compiled OK")
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="fully unroll layer scans (accurate cost_analysis)")
+    ap.add_argument("--cache-profile", default="seq",
+                    choices=["seq", "tp", "dp-cache"],
+                    help="decode KV-cache layout (seq = flash-decoding "
+                         "default, adopted in EXPERIMENTS.md §Perf B-3)")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+    if args.all:
+        res = run_all(multi_pod=args.multi_pod, json_path=args.json,
+                      unroll=args.unroll, cache_profile=args.cache_profile)
+        return 0 if all("error" not in r for r in res) else 1
+    res = dryrun_pair(args.arch, args.shape or "train_4k",
+                      multi_pod=args.multi_pod, unroll=args.unroll,
+                      cache_profile=args.cache_profile)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=1, default=float)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,41 @@
+"""Production mesh builders (DESIGN.md §5).
+
+A FUNCTION, not a module-level constant — importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before any jax import).
+
+Single pod : (16, 16)      axes ("data", "model")   — 256 chips (v5e pod)
+Multi-pod  : (2, 16, 16)   axes ("pod", "data", "model") — 512 chips
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh", "batch_axes",
+           "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over the real local devices (tests / examples)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """Axes the global batch is sharded over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+class HW:
+    """TPU v5e hardware constants for the roofline (per chip)."""
+    PEAK_BF16_FLOPS = 197e12        # FLOP/s
+    HBM_BW = 819e9                  # B/s
+    ICI_BW = 50e9                   # B/s per link
+    HBM_BYTES = 16 * 2 ** 30        # 16 GiB

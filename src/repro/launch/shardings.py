@@ -1,0 +1,185 @@
+"""GSPMD sharding profiles for params, optimizer state, batches, KV caches.
+
+Rules are name-based over pytree paths (DESIGN.md §5):
+
+  * projections whose OUTPUT grows (wq/wk/wv/gate/up/router/in_proj/w_dkv/
+    w_uk/w_uv/lm_head/cb_head): d_out over ``model``, d_in over ``data``
+    (tensor-parallel + FSDP — the "2-D sharded" megatron layout).
+  * projections whose INPUT grows (wo/down/out_proj): d_in over ``model``,
+    d_out over ``data``.
+  * expert stacks (E, ·, ·): E over ``model`` (expert parallelism), second
+    dim over ``data``.
+  * embeddings (V, d): vocab over ``model``.
+  * 1-D leaves (norm scales, A_log, D, dt_bias, conv) replicated.
+  * leading layer-stack axes are always unsharded (scanned over).
+
+Optimizer moments inherit the param spec (ZeRO-style: same shards hold the
+same slice of param + m + v). Batches shard the leading dim over
+``("pod",) data``. KV caches shard batch over data and heads over model —
+except ``long_context`` (batch = 1), where the *sequence* axis takes the
+data dimension (sequence parallelism).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+
+__all__ = ["param_pspec", "params_shardings", "opt_shardings",
+           "batch_shardings", "cache_shardings", "tree_pspecs"]
+
+_OUT_GROWS = {"wq", "wk", "wv", "gate", "up", "router", "in_z", "in_xbc",
+              "in_dt", "w_dkv", "w_uk", "w_uv", "lm_head", "cb_head",
+              "table"}
+_IN_GROWS = {"wo", "down", "out_proj"}
+
+
+def _path_names(path) -> list:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+    return out
+
+
+def fit_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop axis assignments that do not divide the corresponding dim.
+
+    Explicit pjit in_shardings require exact divisibility; rule-derived specs
+    fall back to replication on any dim where the mesh axis doesn't fit
+    (e.g. mamba2's vocab 50280 % 16, MQA kv = 1, batch = 1 decode).
+    """
+    out = []
+    for i, ax in enumerate(spec):
+        if ax is None or i >= len(shape):
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        out.append(ax if shape[i] % size == 0 else None)
+    return P(*out)
+
+
+def param_pspec(path, leaf) -> P:
+    names = _path_names(path)
+    ndim = leaf.ndim
+    tagged = [n for n in names if n in _OUT_GROWS | _IN_GROWS | {"experts"}]
+    name = names[-1] if names else ""
+    if ndim <= 1:
+        return P()
+    if "experts" in names:
+        # (..., E, d_in, d_out): experts over model, middle over data.
+        return P(*([None] * (ndim - 3)), "model", "data", None)
+    if name == "w" and len(names) >= 2:
+        name = names[-2]
+    if name == "table":  # embeddings (…, V, d) — vocab over model
+        return P(*([None] * (ndim - 2)), "model", None)
+    if name in _OUT_GROWS:
+        return P(*([None] * (ndim - 2)), "data", "model")
+    if name in _IN_GROWS:
+        return P(*([None] * (ndim - 2)), "model", "data")
+    if ndim >= 2 and name == "conv_w":
+        return P()
+    return P()
+
+
+def tree_pspecs(tree, spec_fn) -> Any:
+    return jax.tree_util.tree_map_with_path(spec_fn, tree)
+
+
+def params_shardings(mesh: Mesh, params) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(
+            mesh, fit_spec(param_pspec(p, l), l.shape, mesh)), params)
+
+
+def opt_shardings(mesh: Mesh, opt_state) -> Any:
+    """m/v inherit param specs; step is replicated."""
+    def spec(path, leaf):
+        names = _path_names(path)
+        if names and names[0] == "step":
+            return NamedSharding(mesh, P())
+        # strip the leading "m"/"v" key so param rules apply
+        return NamedSharding(
+            mesh, fit_spec(param_pspec(path[1:], leaf), leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(spec, opt_state)
+
+
+def batch_shardings(mesh: Mesh, batch) -> Any:
+    ba = batch_axes(mesh)
+    def spec(path, leaf):
+        ps = P(ba, *([None] * (leaf.ndim - 1)))
+        return NamedSharding(mesh, fit_spec(ps, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def cache_shardings(mesh: Mesh, caches, *, long_context: bool = False,
+                    profile: str = "tp") -> Any:
+    """Cache leaves carry leading stack dims, then (B, buf, …).
+
+    Identified by name: k/v (B, buf, kv, hd); latent/k_rope (B, buf, r);
+    conv (B, k, C); state (B, H, P, N). Leading stack dims (scan axes) are
+    counted as ndim − base_rank.
+
+    ``profile``:
+      "tp"       — batch over data, heads (or head_dim) over model.
+      "dp-cache" — batch over data ONLY; the cache is replicated across the
+                   model axis so per-step attention needs no cache
+                   resharding (params stay model-sharded and are gathered
+                   per layer instead). EXPERIMENTS.md §Perf, decode
+                   iteration.
+      "seq"      — flash-decoding layout: batch over data, the cache BUFFER
+                   over model. The (tiny) query visits every buffer shard;
+                   the (huge) cache never moves — softmax reductions cross
+                   shards instead of cache bytes.
+    """
+    ba = batch_axes(mesh)
+    dp = profile == "dp-cache"
+    # long_500k (batch = 1) already sequence-shards the buffer over data;
+    # the seq profile is a decode_32k layout.
+    seq = profile == "seq" and not long_context
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        nd = leaf.ndim
+        if name in ("k", "v"):
+            lead = nd - 4
+            # MQA / small-GQA: if kv heads don't divide the model axis,
+            # put the model axis on head_dim instead.
+            hd_axis = leaf.shape[-2] % mesh.shape["model"] != 0
+            kv_s = None if (hd_axis or dp or seq) else "model"
+            hd_s = "model" if (hd_axis and not dp and not seq) else None
+            buf_s = "model" if seq else None
+            if long_context:
+                s = P(*([None] * lead), None, ba, kv_s, hd_s)
+            else:
+                s = P(*([None] * lead), ba, buf_s, kv_s, hd_s)
+        elif name in ("latent", "k_rope"):
+            lead = nd - 3
+            r_s = None if (dp or seq) else "model"
+            buf_s = "model" if seq else None
+            if long_context:
+                s = P(*([None] * lead), None, ba, r_s)
+            else:
+                s = P(*([None] * lead), ba, buf_s, r_s)
+        elif name == "state":  # (…, B, H, P, N)
+            lead = nd - 4
+            s = P(*([None] * lead), None if long_context else ba,
+                  "model", None, None)
+        elif name == "conv":   # (…, B, k, C)
+            lead = nd - 3
+            s = P(*([None] * lead), None if long_context else ba,
+                  None, "model")
+        else:
+            s = P()
+        return NamedSharding(mesh, fit_spec(s, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec, caches)

@@ -1,0 +1,83 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --steps 20 \\
+      [--reduced] [--batch 8] [--seq 128] [--accum 1] [--ckpt DIR]
+
+On this CPU container use ``--reduced`` (2-layer variant). On a real pod the
+same entry point runs the full config sharded over ``make_production_mesh()``
+(params/optimizer/batch shardings from ``launch.shardings``); the dry-run
+(launch/dryrun.py) is the no-hardware proof of that path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_pytree
+from repro.configs.base import get_config
+from repro.data.synthetic import token_batch
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_init, cosine_schedule
+from repro.train import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true",
+                    help="2-layer smoke variant (CPU)")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"[train] {cfg.name}: {n / 1e6:.1f}M params, "
+          f"{len(jax.devices())} device(s)")
+    opt_cfg = AdamWConfig(lr=args.lr)
+    state = adamw_init(params, opt_cfg)
+    sched = cosine_schedule(args.lr, warmup=max(args.steps // 10, 1),
+                            total=args.steps)
+    step = jax.jit(make_train_step(cfg, opt_cfg, sched,
+                                   accum_steps=args.accum))
+    t0 = time.time()
+    for i in range(args.steps):
+        toks = token_batch(args.batch, args.seq + 1, cfg.vocab_size,
+                           seed=i)
+        if cfg.num_codebooks:
+            toks = np.broadcast_to(
+                toks[:, None, :], (args.batch, cfg.num_codebooks,
+                                   args.seq + 1)).copy()
+        batch = {"tokens": jnp.asarray(toks)}
+        if cfg.mrope:
+            batch["embeds"] = jnp.zeros(
+                (args.batch, cfg.vlm_num_patches, cfg.d_model), jnp.float32)
+        params, state, m = step(params, state, batch)
+        if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
+            print(f"  step {i:5d} loss {float(m['loss']):.4f} "
+                  f"|g| {float(m['grad_norm']):.2f} "
+                  f"lr {float(m['lr']):.2e}")
+    dt = time.time() - t0
+    print(f"[train] {args.steps} steps in {dt:.1f}s "
+          f"({args.batch * args.seq * args.steps / dt:.0f} tok/s)")
+    if args.ckpt:
+        path = save_pytree({"params": params, "opt": state}, args.ckpt,
+                           name=cfg.name)
+        print(f"[train] checkpoint → {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

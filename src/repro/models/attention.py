@@ -1,0 +1,312 @@
+"""Attention blocks: GQA/MQA (+ sliding window, M-RoPE) and MLA (DeepSeek-V2).
+
+Three modes share one code path per variant:
+  * ``train``   — full-sequence causal, no cache.
+  * ``prefill`` — full-sequence causal, returns the populated KV cache.
+  * ``decode``  — one new token against a cache (ring buffer for windowed
+    layers, full buffer otherwise).
+
+Memory discipline: prefill/train attention is **query-chunked** (lax.scan over
+query blocks) so the (S × S) score matrix never materializes — peak scores are
+(chunk × S). Decode for MLA uses the *absorbed* form (q projected into latent
+space) so per-step compute is O(S · kv_lora), never materializing per-head keys.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.hints import ambient_mesh_sizes, hint
+
+__all__ = [
+    "init_gqa", "gqa_train", "gqa_prefill", "gqa_decode", "init_gqa_cache",
+    "init_mla", "mla_train", "mla_prefill", "mla_decode", "init_mla_cache",
+]
+
+_NEG = -1e9
+# Module-level so the roofline harness can disable chunking: the q-chunk
+# lax.scan body is counted ONCE by XLA cost_analysis, so accurate-FLOPs
+# compiles set Q_CHUNK >= seq_len (scan length 1). Production default 512
+# bounds the live score block to (512 x S).
+Q_CHUNK = 512
+
+
+def _heads_need_pinning(num_heads: int, num_kv: int) -> bool:
+    """Pin kv-group sharding iff (a) a 'model' mesh axis exists, (b) it does
+    NOT divide num_heads (GSPMD would shard head_dim and all-reduce S×S
+    scores), and (c) padding kv heads up to the axis wastes ≤ 2×
+    (measured: kv=2 padded 8× regresses qwen2-vl train +226 %;
+    kv=8 padded 2× wins arctic −73 % — EXPERIMENTS.md §Perf D)."""
+    m = ambient_mesh_sizes().get("model", 0)
+    return bool(m) and num_heads % m != 0 and 2 * num_kv >= m
+
+
+# ---------------------------------------------------------------- core attend
+
+def _attend(q, k, v, q_pos, k_pos, window: int, q_chunk: int = 0):
+    """Chunked masked attention.
+
+    q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd); q_pos: (B, Sq); k_pos: (B, Sk).
+    Causal + optional sliding window; k_pos < 0 marks invalid slots.
+    Returns (B, Sq, H, hd).
+    """
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    vd = v.shape[-1]
+    g = h // kv
+    scale = hd ** -0.5
+    qc = min(q_chunk or Q_CHUNK, sq)
+    pad = (-sq) % qc
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=-1)
+    nq = q.shape[1] // qc
+    qs = q.reshape(b, nq, qc, kv, g, hd)
+    qps = q_pos.reshape(b, nq, qc)
+    if sq > 1 and _heads_need_pinning(h, kv):
+        # Train/prefill, ONLY when q-heads don't divide the model axis (then
+        # GSPMD may shard head_dim and all-reduce the full (S × S) score
+        # tensor — 60 GB/layer on arctic prefill, EXPERIMENTS.md §Perf D):
+        # pin the kv-group axis to the model shards (padded) so the score
+        # einsum contracts an UNsharded head_dim. When heads divide evenly
+        # GSPMD's own choice is better — forcing kv padding there REGRESSES
+        # (llama3 train +33×, measured). Decode (sq == 1) uses the
+        # seq-sharded cache layout instead.
+        qs = hint(qs, "data", None, None, "model", None, None)
+        k = hint(k, "data", None, "model", None)
+        v = hint(v, "data", None, "model", None)
+
+    def chunk(carry, xs):
+        qi, qp = xs                                   # (B,qc,KV,g,hd), (B,qc)
+        # Operands stay in their storage dtype (bf16 on TPU) with fp32 MXU
+        # accumulation — an upfront .astype(f32) would force any GSPMD
+        # cache gather to move twice the bytes (EXPERIMENTS.md §Perf B-2).
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qi, k,
+                       preferred_element_type=jnp.float32) * scale
+        mask = (k_pos[:, None, :] <= qp[:, :, None]) & (k_pos[:, None, :] >= 0)
+        if window:
+            mask &= k_pos[:, None, :] > (qp[:, :, None] - window)
+        mask &= (qp[:, :, None] >= 0)
+        s = jnp.where(mask[:, None, None, :, :], s, _NEG)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        return carry, o
+
+    _, outs = jax.lax.scan(
+        chunk, None,
+        (jnp.moveaxis(qs, 1, 0), jnp.moveaxis(qps, 1, 0)),
+    )                                                  # (nq, B, qc, KV, g, hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nq * qc, h, vd)
+    return out[:, :sq].astype(v.dtype)
+
+
+# ----------------------------------------------------------------------- GQA
+
+def init_gqa(key, cfg: ArchConfig, dtype=jnp.float32):
+    d, h, kv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": L.init_linear(k1, d, h * hd, dtype),
+        "wk": L.init_linear(k2, d, kv * hd, dtype),
+        "wv": L.init_linear(k3, d, kv * hd, dtype),
+        "wo": L.init_linear(k4, h * hd, d, dtype),
+    }
+
+
+def _qkv(params, x, positions, cfg: ArchConfig, positions_3d=None):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = L.linear(params["wq"], x).reshape(b, s, h, hd)
+    k = L.linear(params["wk"], x).reshape(b, s, kv, hd)
+    v = L.linear(params["wv"], x).reshape(b, s, kv, hd)
+    if cfg.mrope and positions_3d is not None:
+        q = L.apply_mrope(q, positions_3d, cfg.rope_theta)
+        k = L.apply_mrope(k, positions_3d, cfg.rope_theta)
+    else:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_train(params, x, positions, cfg: ArchConfig, window: int = 0,
+              positions_3d=None):
+    q, k, v = _qkv(params, x, positions, cfg, positions_3d)
+    out = _attend(q, k, v, positions, positions, window)
+    return L.linear(params["wo"], out.reshape(*x.shape[:2], -1))
+
+
+def init_gqa_cache(cfg: ArchConfig, batch: int, buf_len: int, dtype=jnp.float32):
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, buf_len, kv, hd), dtype=dtype),
+        "v": jnp.zeros((batch, buf_len, kv, hd), dtype=dtype),
+    }
+
+
+def gqa_prefill(params, x, positions, cfg: ArchConfig, buf_len: int,
+                window: int = 0, positions_3d=None):
+    """Full-seq attention + cache population. Returns (y, cache)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(params, x, positions, cfg, positions_3d)
+    out = _attend(q, k, v, positions, positions, window)
+    y = L.linear(params["wo"], out.reshape(b, s, -1))
+    if buf_len >= s:
+        ck = jnp.pad(k, ((0, 0), (0, buf_len - s), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, buf_len - s), (0, 0), (0, 0)))
+    else:  # ring buffer keeps the trailing ``buf_len`` positions
+        tail_k = k[:, s - buf_len:]
+        tail_v = v[:, s - buf_len:]
+        roll = s % buf_len
+        ck = jnp.roll(tail_k, roll, axis=1)
+        cv = jnp.roll(tail_v, roll, axis=1)
+    return y, {"k": ck.astype(x.dtype), "v": cv.astype(x.dtype)}
+
+
+def gqa_decode(params, x, cache, pos, cfg: ArchConfig, window: int = 0):
+    """One-token step. ``pos`` is the absolute position of the new token.
+
+    Full buffers place token at slot ``pos``; windowed (ring) buffers at
+    ``pos % buf_len`` with slot→position recovered arithmetically.
+    """
+    b = x.shape[0]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    buf = cache["k"].shape[1]
+    posv = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q = L.linear(params["wq"], x).reshape(b, 1, h, hd)
+    k = L.linear(params["wk"], x).reshape(b, 1, kv, hd)
+    v = L.linear(params["wv"], x).reshape(b, 1, kv, hd)
+    q = L.apply_rope(q, posv, cfg.rope_theta)
+    k = L.apply_rope(k, posv, cfg.rope_theta)
+    slot = pos % buf if window else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    idx = jnp.arange(buf)
+    if window:
+        # slot i holds absolute position pos − ((pos − i) mod buf).
+        k_pos = pos - jnp.mod(pos - idx, buf)
+    else:
+        k_pos = jnp.where(idx <= pos, idx, -1)
+    k_pos = jnp.broadcast_to(k_pos[None, :], (b, buf)).astype(jnp.int32)
+    out = _attend(q, ck, cv, posv, k_pos, window, q_chunk=1)
+    y = L.linear(params["wo"], out.reshape(b, 1, -1))
+    return y, {"k": ck, "v": cv}
+
+
+# ----------------------------------------------------------------------- MLA
+
+def init_mla(key, cfg: ArchConfig, dtype=jnp.float32):
+    d, h = cfg.d_model, cfg.num_heads
+    nope, rope, vd, lora = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+                            cfg.kv_lora_rank)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "wq": L.init_linear(k1, d, h * (nope + rope), dtype),
+        "w_dkv": L.init_linear(k2, d, lora + rope, dtype),   # latent + shared k_rope
+        "w_uk": L.init_linear(k3, lora, h * nope, dtype),
+        "w_uv": L.init_linear(k4, lora, h * vd, dtype),
+        "wo": L.init_linear(k5, h * vd, d, dtype),
+    }
+
+
+def _mla_qkv_full(params, x, positions, cfg: ArchConfig):
+    """Materialized (train/prefill) form: build per-head k, v from the latent."""
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    nope, rope, vd, lora = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+                            cfg.kv_lora_rank)
+    q = L.linear(params["wq"], x).reshape(b, s, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    dkv = L.linear(params["w_dkv"], x)                       # (B,S,lora+rope)
+    latent, k_rope = dkv[..., :lora], dkv[..., lora:]
+    k_rope = L.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    k_nope = L.linear(params["w_uk"], latent).reshape(b, s, h, nope)
+    v = L.linear(params["w_uv"], latent).reshape(b, s, h, vd)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, h, rope))], axis=-1)
+    return q_full, k_full, v, latent, k_rope[:, :, 0, :]
+
+
+def mla_train(params, x, positions, cfg: ArchConfig, window: int = 0):
+    q, k, v, _, _ = _mla_qkv_full(params, x, positions, cfg)
+    out = _attend(q, k, v, positions, positions, window)
+    return L.linear(params["wo"], out.reshape(*x.shape[:2], -1))
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, buf_len: int, dtype=jnp.float32):
+    return {
+        "latent": jnp.zeros((batch, buf_len, cfg.kv_lora_rank), dtype=dtype),
+        "k_rope": jnp.zeros((batch, buf_len, cfg.qk_rope_dim), dtype=dtype),
+    }
+
+
+def mla_prefill(params, x, positions, cfg: ArchConfig, buf_len: int,
+                window: int = 0):
+    b, s, _ = x.shape
+    q, k, v, latent, k_rope = _mla_qkv_full(params, x, positions, cfg)
+    out = _attend(q, k, v, positions, positions, window)
+    y = L.linear(params["wo"], out.reshape(b, s, -1))
+    pad = buf_len - s
+    cache = {
+        "latent": jnp.pad(latent, ((0, 0), (0, pad), (0, 0))).astype(x.dtype),
+        "k_rope": jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))).astype(x.dtype),
+    }
+    return y, cache
+
+
+def mla_decode(params, x, cache, pos, cfg: ArchConfig, window: int = 0):
+    """Absorbed-MLA decode: scores/context live in the kv_lora latent space.
+
+    score_h(t) = q_nope_h · (W_uk latent_t)  +  q_rope_h · k_rope_t
+               = (W_uk^T q_nope_h) · latent_t + q_rope_h · k_rope_t
+    ctx_h      = Σ_t p_t latent_t  →  out_h = W_uv ctx_h
+    Per-step memory is O(S · lora), independent of head count.
+    """
+    b = x.shape[0]
+    h = cfg.num_heads
+    nope, rope, vd, lora = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+                            cfg.kv_lora_rank)
+    buf = cache["latent"].shape[1]
+    posv = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q = L.linear(params["wq"], x).reshape(b, 1, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = L.apply_rope(q_rope, posv, cfg.rope_theta)
+    dkv = L.linear(params["w_dkv"], x)
+    latent_new, k_rope_new = dkv[..., :lora], dkv[..., lora:]
+    k_rope_new = L.apply_rope(k_rope_new[:, :, None, :], posv, cfg.rope_theta)
+    c_lat = jax.lax.dynamic_update_slice(
+        cache["latent"], latent_new.astype(cache["latent"].dtype), (0, pos, 0))
+    c_kr = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new[:, :, 0, :].astype(cache["k_rope"].dtype),
+        (0, pos, 0))
+    # Absorb W_uk into the query.
+    w_uk = params["w_uk"]["w"].reshape(lora, h, nope)
+    q_lat = jnp.einsum("bqhn,lhn->bhql", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))             # (B,h,1,lora)
+    s_lat = jnp.einsum("bhql,bsl->bhqs", q_lat,
+                       c_lat.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                        c_kr.astype(jnp.float32))
+    scale = (nope + rope) ** -0.5
+    s = (s_lat + s_rope) * scale
+    idx = jnp.arange(buf)
+    mask = (idx <= pos)
+    if window:
+        mask &= idx > (pos - window)
+    s = jnp.where(mask[None, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqs,bsl->bhql", p, c_lat.astype(jnp.float32))
+    w_uv = params["w_uv"]["w"].reshape(lora, h, vd)
+    out = jnp.einsum("bhql,lhv->bqhv", ctx, w_uv.astype(jnp.float32))
+    y = L.linear(params["wo"], out.reshape(b, 1, h * vd).astype(x.dtype))
+    return y, {"latent": c_lat, "k_rope": c_kr}

@@ -1,0 +1,61 @@
+"""Optional GSPMD sharding hints inside model code.
+
+``hint(x, *spec)`` applies ``with_sharding_constraint`` only when the
+surrounding (abstract) mesh actually defines the named axes — so the same
+model code runs unannotated on a single host device and fully annotated
+under the production mesh. Perf-pass iterations (EXPERIMENTS.md §Perf) toggle
+these via ``HINTS_ENABLED``.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+HINTS_ENABLED = True
+
+
+def ambient_mesh_sizes() -> dict:
+    """Axis-name → size of the mesh in scope at trace time ({} if none).
+
+    ``get_abstract_mesh()`` does not reflect a ``with mesh:`` context in
+    JAX 0.8, so we fall back to the (deprecated but functional)
+    thread-resources mesh.
+    """
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if getattr(am, "axis_names", ()):
+            return dict(zip(am.axis_names, am.axis_sizes))
+    except Exception:
+        pass
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            pm = jax.interpreters.pxla.thread_resources.env.physical_mesh
+        if pm is not None and pm.axis_names:
+            return dict(pm.shape)
+    except Exception:
+        pass
+    return {}
+
+
+def _axes_of(spec_entry):
+    if spec_entry is None:
+        return ()
+    if isinstance(spec_entry, tuple):
+        return spec_entry
+    return (spec_entry,)
+
+
+def hint(x, *spec):
+    """Constrain ``x`` to PartitionSpec(*spec); silently no-op when the
+    ambient mesh (trace-time context) doesn't define the axes — i.e. on a
+    plain single-device jit."""
+    if not HINTS_ENABLED:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x

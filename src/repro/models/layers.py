@@ -1,0 +1,136 @@
+"""Shared neural-net layers: RMSNorm, RoPE (+M-RoPE), SwiGLU MLP, embeddings.
+
+Pure-functional: every layer is an ``init_*`` returning a param pytree and an
+``apply`` taking (params, inputs). Weight layout favors 2-D matmuls whose
+contraction dims are multiples of 128 (MXU-aligned) wherever the public spec
+allows.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm", "init_rms_norm",
+    "init_linear", "linear",
+    "init_mlp", "mlp",
+    "init_embedding", "embed",
+    "rope_frequencies", "apply_rope", "apply_mrope",
+    "cross_entropy_loss",
+]
+
+
+# ------------------------------------------------------------------- RMSNorm
+
+def init_rms_norm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rms_norm(params, x, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# -------------------------------------------------------------------- Linear
+
+def init_linear(key, d_in: int, d_out: int, dtype=jnp.float32,
+                scale: Optional[float] = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    w = jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale
+    return {"w": w.astype(dtype)}
+
+
+def linear(params, x):
+    return x @ params["w"]
+
+
+# -------------------------------------------------------------------- SwiGLU
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_linear(k1, d_model, d_ff, dtype),
+        "up": init_linear(k2, d_model, d_ff, dtype),
+        "down": init_linear(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp(params, x):
+    g = jax.nn.silu(linear(params["gate"], x))
+    u = linear(params["up"], x)
+    return linear(params["down"], g * u)
+
+
+# ---------------------------------------------------------------- Embeddings
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32):
+    w = jax.random.normal(key, (vocab, d_model), dtype=jnp.float32) * 0.02
+    return {"table": w.astype(dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+# ---------------------------------------------------------------------- RoPE
+
+def rope_frequencies(head_dim: int, theta: float = 10_000.0):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def _rotate(x, cos, sin):
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (B, S, H, hd); positions: (B, S) int."""
+    freqs = rope_frequencies(x.shape[-1], theta)                  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs        # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def apply_mrope(x, positions_3d, theta: float = 10_000.0):
+    """Multimodal RoPE (Qwen2-VL): three position streams (t, h, w).
+
+    x: (B, S, H, hd); positions_3d: (3, B, S). The rotary half-dim is split
+    into three contiguous sections, each rotated by its own position stream
+    (text tokens carry t = h = w, recovering 1-D RoPE exactly).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = rope_frequencies(hd, theta)                           # (half,)
+    s1 = half // 3
+    s2 = (half - s1) // 2
+    sections = [s1, s2, half - s1 - s2]
+    angs = []
+    start = 0
+    for i, sec in enumerate(sections):
+        f = freqs[start : start + sec]
+        angs.append(positions_3d[i][..., None].astype(jnp.float32) * f)
+        start += sec
+    ang = jnp.concatenate(angs, axis=-1)                          # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- Loss
+
+def cross_entropy_loss(logits, labels, ignore_id: int = -100):
+    """Mean token cross-entropy in fp32; labels == ignore_id are masked."""
+    logits = logits.astype(jnp.float32)
+    mask = labels != ignore_id
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)

@@ -1,0 +1,144 @@
+"""Mixture-of-Experts FFN: top-k routing, shared experts, dense residual.
+
+TPU-native dispatch (DESIGN.md §2): we deliberately avoid the GShard one-hot
+dispatch einsum — its (tokens, E, capacity) tensor is quadratic in routing
+fan-out and blows past HBM at pod scale. Instead dispatch is **gather-based**:
+
+  1. router top-k → flat (T·K,) expert assignments,
+  2. capacity slots via a stable-sort rank (tokens beyond ``capacity`` drop,
+     as in Switch/GShard capacity-factor semantics),
+  3. ``dispatch_idx (E, C)`` gathers token states → (E, C, d),
+  4. one grouped einsum per weight over the stacked expert tensors (the MXU
+     sees E independent (C × d) @ (d × f) matmuls),
+  5. scatter-add combine weighted by router probabilities.
+
+Expert weight tensors are stacked on a leading E axis — the natural
+expert-parallel sharding axis (E over ``model``). The gathers/scatters lower
+to all-to-all under GSPMD when tokens and experts live on different axes.
+
+Load-balance aux loss follows Switch Transformers (mean fraction × mean
+router prob per expert, scaled by E).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.hints import hint
+
+__all__ = ["init_moe", "moe_ffn"]
+
+
+def _init_expert_stack(key, e: int, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_ff = d_ff ** -0.5
+
+    def mk(k, shape, scale):
+        return (jax.random.normal(k, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+    return {
+        "gate": mk(k1, (e, d_model, d_ff), s_in),
+        "up": mk(k2, (e, d_model, d_ff), s_in),
+        "down": mk(k3, (e, d_ff, d_model), s_ff),
+    }
+
+
+def init_moe(key, cfg: ArchConfig, dtype=jnp.float32):
+    e = cfg.num_experts
+    keys = jax.random.split(key, 4)
+    params = {
+        "router": L.init_linear(keys[0], cfg.d_model, e, jnp.float32),
+        "experts": _init_expert_stack(keys[1], e, cfg.d_model, cfg.d_ff, dtype),
+    }
+    if cfg.num_shared_experts:
+        params["shared"] = L.init_mlp(
+            keys[2], cfg.d_model, cfg.d_ff * cfg.num_shared_experts, dtype)
+    if cfg.moe_dense_residual:
+        params["dense"] = L.init_mlp(keys[3], cfg.d_model, cfg.d_ff, dtype)
+    return params
+
+
+def _capacity(cfg: ArchConfig, tokens: int) -> int:
+    cap = int(cfg.capacity_factor * tokens * cfg.top_k / cfg.num_experts)
+    return max(cap, cfg.top_k)
+
+
+def moe_ffn(params, x, cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """MoE feed-forward. x: (B, S, d) → (y (B, S, d), aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    t = b * s
+    xt = x.reshape(t, d)
+    c = _capacity(cfg, t)
+
+    # --- routing (fp32 for a stable softmax) --------------------------------
+    logits = L.linear(params["router"], xt.astype(jnp.float32))     # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                          # (T, K)
+    top_p = top_p / jnp.maximum(top_p.sum(axis=-1, keepdims=True), 1e-9)
+
+    # --- aux load-balance loss (Switch eq. 4) -------------------------------
+    frac_tokens = jnp.mean(
+        (jax.nn.one_hot(top_e[:, 0], e)), axis=0)                   # top-1 share
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = cfg.router_aux_weight * e * jnp.sum(frac_tokens * mean_prob)
+
+    # --- capacity slots: stable sort by expert, rank within expert ----------
+    flat_e = top_e.reshape(-1)                                      # (T·K,)
+    flat_p = top_p.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    # rank of each sorted entry within its expert run
+    idx = jnp.arange(t * k)
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    rank_sorted = idx - seg_start[sorted_e]
+    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)   # unsort
+    keep = rank < c
+    slot = flat_e * c + rank                                        # (T·K,)
+    slot = jnp.where(keep, slot, e * c)                             # drop → pad
+
+    # --- dispatch: gather tokens into (E·C, d) ------------------------------
+    tok_for_slot = jnp.full((e * c + 1,), t, dtype=jnp.int32)       # pad row
+    tok_for_slot = tok_for_slot.at[slot].set(flat_tok.astype(jnp.int32))
+    tok_for_slot = tok_for_slot[: e * c]
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    dispatched = xt_pad[tok_for_slot].reshape(e, c, d)              # (E, C, d)
+    # EXPERIMENTS.md §Perf (arctic-480b iteration 1): without this
+    # constraint GSPMD replicates the dispatch buffer per device. Only
+    # worth it at train/prefill token counts — at decode (t = batch) the
+    # buffers are small and the constraint forces needless resharding.
+    big = t >= 4096
+    if big:
+        dispatched = hint(dispatched, "model", None, None)
+
+    # --- grouped expert SwiGLU (one einsum per weight, E-stacked) -----------
+    w = params["experts"]
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", dispatched, w["gate"]))
+    u = jnp.einsum("ecd,edf->ecf", dispatched, w["up"])
+    out = jnp.einsum("ecf,efd->ecd", g * u, w["down"])              # (E, C, d)
+    if big:
+        out = hint(out, "model", None, None)
+
+    # --- combine: scatter-add weighted expert outputs back to tokens --------
+    out_flat = out.reshape(e * c, d)
+    gathered = jnp.concatenate(
+        [out_flat, jnp.zeros((1, d), out_flat.dtype)], axis=0)[slot]  # (T·K, d)
+    weighted = gathered * flat_p[:, None].astype(gathered.dtype)
+    y = jnp.zeros((t, d), x.dtype).at[flat_tok].add(
+        jnp.where(keep[:, None], weighted, 0.0).astype(x.dtype))
+    if big:
+        y = hint(y, "data", None)
+
+    # --- shared experts & dense residual (DeepSeek / Arctic variants) -------
+    if "shared" in params:
+        y = y + L.mlp(params["shared"], xt)
+    if "dense" in params:
+        y = y + L.mlp(params["dense"], xt)
+    return y.reshape(b, s, d), aux

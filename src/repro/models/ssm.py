@@ -1,0 +1,239 @@
+"""Mamba2 (SSD — state-space duality) mixer: chunked train scan + O(1) decode.
+
+Follows the SSD formulation of arXiv:2405.21060: the selective SSM is computed
+chunk-wise — a quadratic *intra-chunk* term (a masked attention-like einsum
+over chunk length, MXU-friendly) plus a linear *inter-chunk* recurrence over
+per-chunk states carried by ``lax.scan``. Per-token decode maintains the
+recurrent state ``(B, H, hd, N)`` explicitly, giving O(1) work per generated
+token — this is what makes the ``long_500k`` shape native for SSM archs.
+
+Conventions (n_groups = 1, B/C shared across heads, as in the 370m config):
+  d_inner = expand · d_model,  H = d_inner / headdim,  N = ssm_state.
+in_proj emits [z | x | B | C | dt]; a depthwise causal conv runs over
+[x | B | C] channels; gated RMSNorm before out_proj.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.hints import hint
+
+__all__ = ["init_mamba2", "mamba2_train", "mamba2_decode", "init_mamba2_cache",
+           "ssd_chunked"]
+
+# Intra-chunk SSD einsum dtype. fp32 is the correctness-safe default; the
+# perf pass (EXPERIMENTS.md §Perf, mamba2 iteration) measures bf16 with the
+# inter-chunk state kept fp32.
+SSD_COMPUTE_DTYPE = jnp.float32
+
+# Route the intra-chunk term through the fused Pallas kernel
+# (kernels/ssd.py) instead of the jnp einsum chain. On TPU this keeps the
+# (lc × lc) decay block in VMEM; on CPU the kernel runs interpret=True
+# (slow — default off here, on for TPU deployments).
+USE_PALLAS_INTRA = False
+
+
+def _dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = d_inner // cfg.ssm_headdim
+    return d_inner, heads, cfg.ssm_state, cfg.ssm_headdim
+
+
+def init_mamba2(key, cfg: ArchConfig, dtype=jnp.float32):
+    """Input projections are SPLIT (z | xBC | dt as separate matmuls) rather
+    than one fused in_proj: fused output slices land at non-shard-aligned
+    offsets under tensor parallelism and cost a collective-permute shuffle
+    per slice per layer (EXPERIMENTS.md §Perf, mamba2 iteration 3). Three
+    aligned projections shard cleanly and lower to zero resharding."""
+    d = cfg.d_model
+    d_inner, h, n, _ = _dims(cfg)
+    conv_ch = d_inner + 2 * n
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "in_z": L.init_linear(k1, d, d_inner, dtype),
+        "in_xbc": L.init_linear(k4, d, conv_ch, dtype),
+        "in_dt": L.init_linear(k5, d, h, dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv, conv_ch),
+                                     dtype=jnp.float32)
+                   * (cfg.ssm_conv ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype=dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((h,), dtype=jnp.float32),
+        "norm": L.init_rms_norm(d_inner, dtype),
+        "out_proj": L.init_linear(k3, d_inner, d, dtype),
+    }
+
+
+def _project_in(params, x):
+    """Split input projections (see init_mamba2 docstring)."""
+    return (L.linear(params["in_z"], x),
+            L.linear(params["in_xbc"], x),
+            L.linear(params["in_dt"], x))
+
+
+def _causal_conv(xbc, conv_w, conv_b):
+    """Depthwise causal conv over the sequence axis. xbc: (B, S, C)."""
+    kw = conv_w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (kw - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * conv_w[i][None, None, :]
+        for i in range(kw)
+    )
+    return jax.nn.silu(out + conv_b[None, None, :])
+
+
+def _segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{j < t <= i} x[..., t].
+
+    x: (..., Lc) → (..., Lc, Lc) lower-triangular log-decay matrix.
+    """
+    lc = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(lc)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int,
+                init_state=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan.
+
+    x: (B, S, H, P)  dt: (B, S, H)  a: (H,) (negative)
+    b_mat/c_mat: (B, S, N)  (n_groups=1, broadcast over heads)
+    Returns (y (B, S, H, P), final_state (B, H, P, N)).
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    lc = min(chunk, s)
+    pad = (-s) % lc
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // lc
+
+    xc = x.reshape(bsz, nc, lc, h, p)
+    dtc = dt.reshape(bsz, nc, lc, h)
+    bc = b_mat.reshape(bsz, nc, lc, n)
+    cc = c_mat.reshape(bsz, nc, lc, n)
+
+    da = dtc * a[None, None, None, :]                       # (B,nc,lc,H) ≤ 0
+    a_cs = jnp.cumsum(da, axis=2)                           # within-chunk
+    xdt = xc * dtc[..., None]
+
+    # Intra-chunk (quadratic in lc — the "attention duality" term).
+    ct = SSD_COMPUTE_DTYPE
+    if USE_PALLAS_INTRA:
+        from repro.kernels import ops as kops
+        g = bsz * nc
+        y_k = kops.ssd_intra(
+            cc.reshape(g, lc, n).astype(jnp.float32),
+            bc.reshape(g, lc, n).astype(jnp.float32),
+            da.reshape(g, lc, h).transpose(0, 2, 1).astype(jnp.float32),
+            xdt.reshape(g, lc, h, p).transpose(0, 2, 1, 3)
+            .astype(jnp.float32))                       # (G, H, lc, P)
+        y_diag = y_k.transpose(0, 2, 1, 3).reshape(bsz, nc, lc, h, p)
+    else:
+        decay = jnp.exp(_segsum(jnp.moveaxis(da, 3, 2)))    # (B,nc,H,lc,lc)
+        y_diag = jnp.einsum("bcln,bcsn,bchls,bcshp->bclhp",
+                            cc.astype(ct), bc.astype(ct), decay.astype(ct),
+                            xdt.astype(ct)).astype(jnp.float32)
+
+    # Per-chunk input → state contribution.
+    decay_states = jnp.exp(a_cs[:, :, -1:, :] - a_cs)       # (B,nc,lc,H)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn",
+                        bc, decay_states, xdt)              # (B,nc,H,P,N)
+
+    # Inter-chunk recurrence (linear scan over chunks).
+    chunk_decay = jnp.exp(a_cs[:, :, -1, :])                # (B,nc,H)
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), dtype=states.dtype)
+
+    def step(carry, inp):
+        st, dec = inp                                       # (B,H,P,N),(B,H)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                    # emit *prior*
+
+    final, prior = jax.lax.scan(
+        step, init_state,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prior = jnp.moveaxis(prior, 0, 1)                       # (B,nc,H,P,N)
+
+    # Inter-chunk output: prior state read out through C with in-chunk decay.
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp",
+                       cc.astype(ct), prior.astype(ct),
+                       jnp.exp(a_cs).astype(ct)).astype(jnp.float32)
+    y = (y_diag + y_off).reshape(bsz, nc * lc, h, p)
+    return y[:, :s], final
+
+
+def mamba2_train(params, x, cfg: ArchConfig, init_state=None):
+    """Full-sequence mixer. x: (B, S, d_model) → (B, S, d_model)."""
+    d_inner, h, n, p = _dims(cfg)
+    z, xbc, dt = _project_in(params, x)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs = xbc[..., :d_inner]
+    b_mat = xbc[..., d_inner : d_inner + n]
+    c_mat = xbc[..., d_inner + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    a = -jnp.exp(params["A_log"])
+    # §Perf (mamba2 iteration): heads shard over 'model'; the slim shared
+    # B/C/dt streams are replicated (n_groups=1 — every head reads them),
+    # preventing GSPMD from resharding the fat xs stream instead.
+    xs = hint(xs, "data", None, "model")
+    b_mat = hint(b_mat, "data", None, None)
+    c_mat = hint(c_mat, "data", None, None)
+    xh = xs.reshape(*xs.shape[:2], h, p).astype(jnp.float32)
+    xh = hint(xh, "data", None, "model", None)
+    y, state = ssd_chunked(xh, dt, a, b_mat.astype(jnp.float32),
+                           c_mat.astype(jnp.float32), cfg.ssm_chunk)
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(*xs.shape[:2], d_inner).astype(x.dtype)
+    y = L.rms_norm(params["norm"], y * jax.nn.silu(z))
+    return L.linear(params["out_proj"], y), state
+
+
+def init_mamba2_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    d_inner, h, n, p = _dims(cfg)
+    conv_ch = d_inner + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype=dtype),
+        "state": jnp.zeros((batch, h, p, n), dtype=jnp.float32),
+    }
+
+
+def mamba2_decode(params, x, cache, cfg: ArchConfig):
+    """Single-token recurrent step. x: (B, 1, d_model)."""
+    d_inner, h, n, p = _dims(cfg)
+    bsz = x.shape[0]
+    z, xbc, dt = _project_in(params, x[:, 0, :])
+    window = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    xbc = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32))
+    xs = xbc[..., :d_inner]
+    b_vec = xbc[..., d_inner : d_inner + n]
+    c_vec = xbc[..., d_inner + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, :])
+    da = jnp.exp(dt * (-jnp.exp(params["A_log"]))[None, :])     # (B,H)
+    xh = xs.reshape(bsz, h, p)
+    state = (cache["state"] * da[:, :, None, None]
+             + jnp.einsum("bhp,bn,bh->bhpn", xh, b_vec, dt))
+    y = jnp.einsum("bhpn,bn->bhp", state, c_vec)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+    y = L.rms_norm(params["norm"], y * jax.nn.silu(z[:, None, :]))
+    out = L.linear(params["out_proj"], y)
+    return out, {"conv": window[:, 1:].astype(cache["conv"].dtype),
+                 "state": state}

@@ -1,0 +1,547 @@
+"""Decoder assembly for every assigned architecture family.
+
+One code path builds all ten configs. Layers are stacked on a leading axis and
+applied with ``lax.scan`` (bounded HLO size / compile time at pod scale);
+heterogeneous schedules scan over *repeating units*:
+
+  dense / moe / ssm / vlm / audio — one homogeneous stack of ``num_layers``.
+  gemma3 (local:global R:1)       — outer scan over units of (R local + 1
+                                    global); remainder locals form a tail
+                                    stack. Local layers keep ring caches of
+                                    ``sliding_window``; globals keep full
+                                    buffers — heterogeneous cache shapes are
+                                    why the unit structure exists.
+  zamba2 (hybrid)                 — outer scan over units of (E mamba blocks +
+                                    1 *shared* attention+MLP block whose
+                                    params are closure-captured, i.e. one
+                                    weight set reused at every unit, per the
+                                    Zamba2 design); remainder mamba tail.
+
+Three entry points per model: ``forward_train`` (full-seq logits + aux loss),
+``prefill`` (populate caches, last-token logits), ``decode_step`` (one token).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+__all__ = ["init_params", "forward_train", "prefill", "decode_step",
+           "init_decode_caches", "make_positions", "vlm_positions_3d"]
+
+_BIG_BUF = 1 << 30
+
+
+# ======================================================================
+# single blocks
+# ======================================================================
+
+def _block_kind(cfg: ArchConfig) -> str:
+    if cfg.family == "ssm":
+        return "mamba"
+    if cfg.mla:
+        return "mla"
+    return "gqa"
+
+
+def init_block(key, cfg: ArchConfig, dtype=jnp.float32,
+               kind: Optional[str] = None):
+    kind = kind or _block_kind(cfg)
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {"norm1": L.init_rms_norm(cfg.d_model, dtype)}
+    if kind == "mamba":
+        p["mixer"] = S.init_mamba2(k1, cfg, dtype)
+        if cfg.d_ff:
+            p["norm2"] = L.init_rms_norm(cfg.d_model, dtype)
+            p["ffn"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+        return p
+    p["attn"] = (A.init_mla(k1, cfg, dtype) if kind == "mla"
+                 else A.init_gqa(k1, cfg, dtype))
+    p["norm2"] = L.init_rms_norm(cfg.d_model, dtype)
+    if cfg.num_experts:
+        p["ffn"] = M.init_moe(k2, cfg, dtype)
+    else:
+        p["ffn"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def block_train(params, x, positions, cfg: ArchConfig, *, window: int = 0,
+                positions_3d=None, kind: Optional[str] = None):
+    """(x, aux) → (y, aux). Full-sequence (train/prefill math, no cache)."""
+    kind = kind or _block_kind(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rms_norm(params["norm1"], x, cfg.norm_eps)
+    if kind == "mamba":
+        mixed, _ = S.mamba2_train(params["mixer"], h, cfg)
+        x = x + mixed
+        if cfg.d_ff and "ffn" in params:
+            h2 = L.rms_norm(params["norm2"], x, cfg.norm_eps)
+            x = x + L.mlp(params["ffn"], h2)
+        return x, aux
+    if kind == "mla":
+        x = x + A.mla_train(params["attn"], h, positions, cfg, window)
+    else:
+        x = x + A.gqa_train(params["attn"], h, positions, cfg, window,
+                            positions_3d)
+    h2 = L.rms_norm(params["norm2"], x, cfg.norm_eps)
+    if cfg.num_experts:
+        y, aux = M.moe_ffn(params["ffn"], h2, cfg)
+        x = x + y
+    else:
+        x = x + L.mlp(params["ffn"], h2)
+    return x, aux
+
+
+def block_prefill(params, x, positions, cfg: ArchConfig, buf_len: int, *,
+                  window: int = 0, positions_3d=None,
+                  kind: Optional[str] = None):
+    kind = kind or _block_kind(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rms_norm(params["norm1"], x, cfg.norm_eps)
+    if kind == "mamba":
+        d_inner, nh, n, pdim = S._dims(cfg)
+        z, xbc, dt = S._project_in(params["mixer"], h)
+        xbc_conv = S._causal_conv(xbc, params["mixer"]["conv_w"],
+                                  params["mixer"]["conv_b"])
+        xs = xbc_conv[..., :d_inner]
+        b_mat = xbc_conv[..., d_inner : d_inner + n]
+        c_mat = xbc_conv[..., d_inner + n :]
+        dtf = jax.nn.softplus(dt.astype(jnp.float32)
+                              + params["mixer"]["dt_bias"][None, None, :])
+        a = -jnp.exp(params["mixer"]["A_log"])
+        xh = xs.reshape(*xs.shape[:2], nh, pdim).astype(jnp.float32)
+        y, state = S.ssd_chunked(xh, dtf, a, b_mat.astype(jnp.float32),
+                                 c_mat.astype(jnp.float32), cfg.ssm_chunk)
+        y = y + params["mixer"]["D"][None, None, :, None] * xh
+        y = y.reshape(*xs.shape[:2], d_inner).astype(x.dtype)
+        y = L.rms_norm(params["mixer"]["norm"], y * jax.nn.silu(z))
+        x = x + L.linear(params["mixer"]["out_proj"], y)
+        cache = {"conv": xbc[:, -(cfg.ssm_conv - 1):, :].astype(x.dtype),
+                 "state": state}
+        if cfg.d_ff and "ffn" in params:
+            h2 = L.rms_norm(params["norm2"], x, cfg.norm_eps)
+            x = x + L.mlp(params["ffn"], h2)
+        return x, cache, aux
+    if kind == "mla":
+        y, cache = A.mla_prefill(params["attn"], h, positions, cfg, buf_len,
+                                 window)
+    else:
+        y, cache = A.gqa_prefill(params["attn"], h, positions, cfg, buf_len,
+                                 window, positions_3d)
+    x = x + y
+    h2 = L.rms_norm(params["norm2"], x, cfg.norm_eps)
+    if cfg.num_experts:
+        y2, aux = M.moe_ffn(params["ffn"], h2, cfg)
+        x = x + y2
+    else:
+        x = x + L.mlp(params["ffn"], h2)
+    return x, cache, aux
+
+
+def block_decode(params, x, cache, pos, cfg: ArchConfig, *, window: int = 0,
+                 kind: Optional[str] = None):
+    kind = kind or _block_kind(cfg)
+    h = L.rms_norm(params["norm1"], x, cfg.norm_eps)
+    if kind == "mamba":
+        mixed, cache = S.mamba2_decode(params["mixer"], h, cache, cfg)
+        x = x + mixed
+        if cfg.d_ff and "ffn" in params:
+            h2 = L.rms_norm(params["norm2"], x, cfg.norm_eps)
+            x = x + L.mlp(params["ffn"], h2)
+        return x, cache
+    if kind == "mla":
+        y, cache = A.mla_decode(params["attn"], h, cache, pos, cfg, window)
+    else:
+        y, cache = A.gqa_decode(params["attn"], h, cache, pos, cfg, window)
+    x = x + y
+    h2 = L.rms_norm(params["norm2"], x, cfg.norm_eps)
+    if cfg.num_experts:
+        y2, _ = M.moe_ffn(params["ffn"], h2, cfg)
+        x = x + y2
+    else:
+        x = x + L.mlp(params["ffn"], h2)
+    return x, cache
+
+
+def init_block_cache(cfg: ArchConfig, batch: int, buf_len: int,
+                     dtype=jnp.float32, kind: Optional[str] = None):
+    kind = kind or _block_kind(cfg)
+    if kind == "mamba":
+        return S.init_mamba2_cache(cfg, batch, dtype)
+    if kind == "mla":
+        return A.init_mla_cache(cfg, batch, buf_len, dtype)
+    return A.init_gqa_cache(cfg, batch, buf_len, dtype)
+
+
+# ======================================================================
+# layer schedules
+# ======================================================================
+
+def _schedule(cfg: ArchConfig):
+    """Returns (kind, counts...) describing the stacked-layer layout."""
+    if cfg.family == "dense" and cfg.local_global_ratio:
+        r = cfg.local_global_ratio
+        units = cfg.num_layers // (r + 1)
+        tail = cfg.num_layers - units * (r + 1)
+        return ("local_global", r, units, tail)
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        e = cfg.hybrid_attn_every
+        units = cfg.num_layers // e
+        tail = cfg.num_layers - units * e
+        return ("hybrid", e, units, tail)
+    return ("uniform", cfg.num_layers)
+
+
+def _stacked_init(key, n: int, init_fn):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _window_for(cfg: ArchConfig) -> int:
+    if cfg.attention == "sliding" and cfg.sliding_window:
+        return cfg.sliding_window
+    return 0
+
+
+# ======================================================================
+# params
+# ======================================================================
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": L.init_embedding(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": L.init_rms_norm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_linear(keys[1], cfg.d_model,
+                                          cfg.vocab_size, dtype)
+    if cfg.num_codebooks:
+        # MusicGen: K codebook embeddings (summed) + K output heads.
+        params["cb_embed"] = jax.vmap(
+            lambda k: L.init_embedding(k, cfg.vocab_size, cfg.d_model, dtype)
+        )(jax.random.split(keys[2], cfg.num_codebooks))
+        params["cb_head"] = jax.vmap(
+            lambda k: L.init_linear(k, cfg.d_model, cfg.vocab_size, dtype)
+        )(jax.random.split(keys[3], cfg.num_codebooks))
+        del params["embed"]
+
+    sched = _schedule(cfg)
+    if sched[0] == "uniform":
+        params["blocks"] = _stacked_init(
+            keys[4], cfg.num_layers, lambda k: init_block(k, cfg, dtype))
+    elif sched[0] == "local_global":
+        _, r, units, tail = sched
+        def unit_init(k):
+            kl, kg = jax.random.split(k)
+            return {
+                "local": _stacked_init(kl, r,
+                                       lambda kk: init_block(kk, cfg, dtype)),
+                "global": init_block(kg, cfg, dtype),
+            }
+        params["units"] = _stacked_init(keys[4], units, unit_init)
+        if tail:
+            params["tail"] = _stacked_init(
+                keys[5], tail, lambda k: init_block(k, cfg, dtype))
+    else:  # hybrid
+        _, e, units, tail = sched
+        params["units"] = _stacked_init(
+            keys[4], units,
+            lambda k: _stacked_init(k, e,
+                                    lambda kk: init_block(kk, cfg, dtype,
+                                                          kind="mamba")))
+        if tail:
+            params["tail"] = _stacked_init(
+                keys[5], tail,
+                lambda k: init_block(k, cfg, dtype, kind="mamba"))
+        # ONE shared attention+MLP block reused at every unit boundary.
+        params["shared_attn"] = init_block(keys[6], cfg, dtype, kind="gqa")
+    return params
+
+
+# ======================================================================
+# positions / embeddings helpers
+# ======================================================================
+
+def make_positions(batch: int, seq: int):
+    return jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None, :],
+                            (batch, seq))
+
+
+def vlm_positions_3d(batch: int, seq: int, num_patches: int):
+    """Qwen2-VL M-RoPE ids: patch prefix gets (t=0, h, w) grid; text runs on.
+
+    Returns (3, B, S) int32.
+    """
+    side = max(int(num_patches ** 0.5), 1)
+    idx = jnp.arange(seq)
+    in_img = idx < num_patches
+    # Image patches: t = 0, (h, w) on the patch grid. Text: t = h = w = idx,
+    # which makes M-RoPE coincide with 1-D RoPE for text (so the decode path,
+    # which rotates with a scalar position, is exactly consistent).
+    t = jnp.where(in_img, 0, idx)
+    h = jnp.where(in_img, idx // side, idx)
+    w = jnp.where(in_img, idx % side, idx)
+    pos3 = jnp.stack([t, h, w]).astype(jnp.int32)        # (3, S)
+    return jnp.broadcast_to(pos3[:, None, :], (3, batch, seq))
+
+
+def _embed_inputs(params, tokens, cfg: ArchConfig, embeds=None):
+    """tokens → (B, S, d). Audio sums K codebook embeddings; VLM prepends
+    provided patch embeddings before the token embeddings."""
+    if cfg.num_codebooks:
+        # tokens: (B, K, S)
+        embs = jax.vmap(L.embed, in_axes=(0, 1), out_axes=2)(
+            params["cb_embed"], tokens)                  # (B, S, K, d)
+        return embs.sum(axis=2)
+    x = L.embed(params["embed"], tokens)                 # (B, S, d)
+    if cfg.mrope and embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _lm_logits(params, x, cfg: ArchConfig):
+    if cfg.num_codebooks:
+        return jnp.einsum("bsd,kdv->bskv", x,
+                          params["cb_head"]["w"])        # (B, S, K, V)
+    if cfg.tie_embeddings:
+        return x @ params["embed"]["table"].T
+    return L.linear(params["lm_head"], x)
+
+
+# ======================================================================
+# forward (train)
+# ======================================================================
+
+def forward_train(params, tokens, cfg: ArchConfig, *, embeds=None,
+                  remat: bool = True, unroll: bool = False):
+    """Full-sequence forward. Returns (logits, aux_loss)."""
+    x = _embed_inputs(params, tokens, cfg, embeds)
+    b, s = x.shape[:2]
+    positions = make_positions(b, s)
+    pos3 = (vlm_positions_3d(b, s, cfg.vlm_num_patches)
+            if cfg.mrope else None)
+    window = _window_for(cfg)
+    sched = _schedule(cfg)
+    aux = jnp.zeros((), jnp.float32)
+
+    def scan_stack(x, stacked, *, kind=None, window=0):
+        def body(carry, lp):
+            y, a = block_train(lp, carry, positions, cfg, window=window,
+                               positions_3d=pos3, kind=kind)
+            return y, a
+        if remat:
+            body = jax.checkpoint(body)
+        x, auxs = jax.lax.scan(body, x, stacked, unroll=unroll)
+        return x, auxs.sum()
+
+    if sched[0] == "uniform":
+        x, a = scan_stack(x, params["blocks"], window=window)
+        aux += a
+    elif sched[0] == "local_global":
+        _, r, units, tail = sched
+        win = cfg.sliding_window
+
+        def unit_body(carry, up):
+            y, a1 = scan_stack(carry, up["local"], window=win)
+            y, a2 = block_train(up["global"], y, positions, cfg, window=0,
+                                positions_3d=pos3)
+            return y, a1 + a2
+        if remat:
+            unit_body = jax.checkpoint(unit_body)
+        x, auxs = jax.lax.scan(unit_body, x, params["units"], unroll=unroll)
+        aux += auxs.sum()
+        if tail:
+            x, a = scan_stack(x, params["tail"], window=win)
+            aux += a
+    else:  # hybrid
+        _, e, units, tail = sched
+        shared = params["shared_attn"]
+
+        def unit_body(carry, up):
+            y, a1 = scan_stack(carry, up, kind="mamba")
+            y, a2 = block_train(shared, y, positions, cfg, kind="gqa")
+            return y, a1 + a2
+        if remat:
+            unit_body = jax.checkpoint(unit_body)
+        x, auxs = jax.lax.scan(unit_body, x, params["units"], unroll=unroll)
+        aux += auxs.sum()
+        if tail:
+            x, a = scan_stack(x, params["tail"], kind="mamba")
+            aux += a
+
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return _lm_logits(params, x, cfg), aux
+
+
+# ======================================================================
+# prefill
+# ======================================================================
+
+def prefill(params, tokens, cfg: ArchConfig, *, buf_len: Optional[int] = None,
+            embeds=None, unroll: bool = False):
+    """Populate all caches; return (last-token logits, caches pytree)."""
+    x = _embed_inputs(params, tokens, cfg, embeds)
+    b, s = x.shape[:2]
+    buf_len = buf_len or s
+    positions = make_positions(b, s)
+    pos3 = (vlm_positions_3d(b, s, cfg.vlm_num_patches)
+            if cfg.mrope else None)
+    window = _window_for(cfg)
+    sched = _schedule(cfg)
+    caches: Dict[str, Any] = {}
+
+    def scan_stack(x, stacked, *, kind=None, window=0, buf=None):
+        def body(carry, lp):
+            y, cache, _ = block_prefill(lp, carry, positions, cfg,
+                                        buf if buf is not None else buf_len,
+                                        window=window, positions_3d=pos3,
+                                        kind=kind)
+            return y, cache
+        return jax.lax.scan(body, x, stacked, unroll=unroll)
+
+    if sched[0] == "uniform":
+        x, caches["blocks"] = scan_stack(x, params["blocks"], window=window)
+    elif sched[0] == "local_global":
+        _, r, units, tail = sched
+        win = cfg.sliding_window
+        wbuf = min(win, buf_len)
+
+        def unit_body(carry, up):
+            y, lc = scan_stack(carry, up["local"], window=win, buf=wbuf)
+            y, gc, _ = block_prefill(up["global"], y, positions, cfg,
+                                     buf_len, window=0, positions_3d=pos3)
+            return y, {"local": lc, "global": gc}
+        x, caches["units"] = jax.lax.scan(unit_body, x, params["units"],
+                                          unroll=unroll)
+        if tail:
+            x, caches["tail"] = scan_stack(x, params["tail"], window=win,
+                                           buf=wbuf)
+    else:  # hybrid
+        _, e, units, tail = sched
+        shared = params["shared_attn"]
+
+        def unit_body(carry, up):
+            y, mc = scan_stack(carry, up, kind="mamba")
+            y, ac, _ = block_prefill(shared, y, positions, cfg, buf_len,
+                                     kind="gqa")
+            return y, {"mamba": mc, "attn": ac}
+        x, caches["units"] = jax.lax.scan(unit_body, x, params["units"],
+                                          unroll=unroll)
+        if tail:
+            x, caches["tail"] = scan_stack(x, params["tail"], kind="mamba")
+
+    x = L.rms_norm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    return _lm_logits(params, x, cfg), caches
+
+
+# ======================================================================
+# decode
+# ======================================================================
+
+def init_decode_caches(cfg: ArchConfig, batch: int, buf_len: int,
+                       dtype=jnp.float32):
+    """Cache pytree matching :func:`prefill` layout (for decode dry-runs)."""
+    sched = _schedule(cfg)
+    window = _window_for(cfg)
+    buf = min(window, buf_len) if window else buf_len
+
+    def stack(n, fn):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (n, *x.shape)), fn())
+
+    if sched[0] == "uniform":
+        return {"blocks": stack(
+            cfg.num_layers,
+            lambda: init_block_cache(cfg, batch, buf, dtype))}
+    if sched[0] == "local_global":
+        _, r, units, tail = sched
+        wbuf = min(cfg.sliding_window, buf_len)
+        unit = lambda: {
+            "local": stack(r, lambda: init_block_cache(cfg, batch, wbuf,
+                                                       dtype, kind="gqa")),
+            "global": init_block_cache(cfg, batch, buf_len, dtype,
+                                       kind="gqa"),
+        }
+        out = {"units": stack(units, unit)}
+        if tail:
+            out["tail"] = stack(tail, lambda: init_block_cache(
+                cfg, batch, wbuf, dtype, kind="gqa"))
+        return out
+    _, e, units, tail = sched
+    unit = lambda: {
+        "mamba": stack(e, lambda: init_block_cache(cfg, batch, 0, dtype,
+                                                   kind="mamba")),
+        "attn": init_block_cache(cfg, batch, buf_len, dtype, kind="gqa"),
+    }
+    out = {"units": stack(units, unit)}
+    if tail:
+        out["tail"] = stack(tail, lambda: init_block_cache(
+            cfg, batch, 0, dtype, kind="mamba"))
+    return out
+
+
+def decode_step(params, tokens, caches, pos, cfg: ArchConfig, *,
+                unroll: bool = False):
+    """One decode step. tokens: (B, 1) (or (B, K, 1) audio); pos scalar."""
+    if cfg.num_codebooks:
+        embs = jax.vmap(L.embed, in_axes=(0, 1), out_axes=2)(
+            params["cb_embed"], tokens)
+        x = embs.sum(axis=2)
+    else:
+        x = L.embed(params["embed"], tokens)
+    window = _window_for(cfg)
+    sched = _schedule(cfg)
+    new_caches: Dict[str, Any] = {}
+
+    def scan_stack(x, stacked, cstack, *, kind=None, window=0):
+        def body(carry, inp):
+            lp, lc = inp
+            y, nc = block_decode(lp, carry, lc, pos, cfg, window=window,
+                                 kind=kind)
+            return y, nc
+        return jax.lax.scan(body, x, (stacked, cstack), unroll=unroll)
+
+    if sched[0] == "uniform":
+        x, new_caches["blocks"] = scan_stack(
+            x, params["blocks"], caches["blocks"], window=window)
+    elif sched[0] == "local_global":
+        _, r, units, tail = sched
+        win = cfg.sliding_window
+
+        def unit_body(carry, inp):
+            up, uc = inp
+            y, lc = scan_stack(carry, up["local"], uc["local"], window=win)
+            y, gc = block_decode(up["global"], y, uc["global"], pos, cfg,
+                                 window=0)
+            return y, {"local": lc, "global": gc}
+        x, new_caches["units"] = jax.lax.scan(
+            unit_body, x, (params["units"], caches["units"]), unroll=unroll)
+        if tail:
+            x, new_caches["tail"] = scan_stack(
+                x, params["tail"], caches["tail"], window=win)
+    else:  # hybrid
+        _, e, units, tail = sched
+        shared = params["shared_attn"]
+
+        def unit_body(carry, inp):
+            up, uc = inp
+            y, mc = scan_stack(carry, up, uc["mamba"], kind="mamba")
+            y, ac = block_decode(shared, y, uc["attn"], pos, cfg, kind="gqa")
+            return y, {"mamba": mc, "attn": ac}
+        x, new_caches["units"] = jax.lax.scan(
+            unit_body, x, (params["units"], caches["units"]), unroll=unroll)
+        if tail:
+            x, new_caches["tail"] = scan_stack(
+                x, params["tail"], caches["tail"], kind="mamba")
+
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return _lm_logits(params, x, cfg), new_caches

@@ -1,0 +1,13 @@
+"""Optimizers & schedules (pure pytree transforms, no external deps).
+
+AdamW with decoupled weight decay, global-norm clipping, and cosine/linear
+warmup schedules. State dtype is configurable: fp32 moments by default,
+bf16 moments for memory-bound giants (arctic-480b — see DESIGN.md §4).
+"""
+
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               global_norm, clip_by_global_norm)
+from repro.optim.schedule import cosine_schedule, linear_schedule
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm",
+           "clip_by_global_norm", "cosine_schedule", "linear_schedule"]

@@ -1,0 +1,7 @@
+"""Serving substrate: batched prefill/decode engine + OSQ-quantized KV."""
+
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.kv_quant import quantize_caches, dequantize_caches, cache_bytes
+
+__all__ = ["Engine", "ServeConfig", "quantize_caches", "dequantize_caches",
+           "cache_bytes"]

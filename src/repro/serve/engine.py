@@ -1,0 +1,91 @@
+"""Batched serving engine: prefill + greedy/sampled decode over any arch.
+
+The engine mirrors SQUASH's QA/QP division of labor (DESIGN.md §2): prefill
+is the "allocator" phase (big parallel pass building per-request state), and
+the decode loop is the "processor" phase (small steps against resident state
+— the KV cache plays the role of the DRE warm container: pay the build cost
+once, reuse it across invocations).
+
+Optional OSQ-quantized KV cache (``kv_bits``): the paper's segment-packed
+scalar quantization applied to the KV tensor — per-(head, channel) ranges,
+``kv_bits``-bit codes packed ``32 // kv_bits`` to an int32 lane word
+(beyond-paper feature; see EXPERIMENTS.md §Perf for the bandwidth math).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.serve.kv_quant import dequantize_caches, quantize_caches
+
+__all__ = ["ServeConfig", "Engine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0          # 0 → greedy
+    kv_bits: int = 0                  # 0 → fp cache; 8/4 → OSQ-packed cache
+    seed: int = 0
+
+
+class Engine:
+    """Holds params + jitted step functions for one architecture."""
+
+    def __init__(self, cfg: ArchConfig, params, serve_cfg: ServeConfig = None):
+        self.cfg = cfg
+        self.params = params
+        self.serve_cfg = serve_cfg or ServeConfig()
+        self._prefill = jax.jit(
+            functools.partial(T.prefill, cfg=cfg),
+            static_argnames=("buf_len",))
+        self._decode = jax.jit(functools.partial(self._decode_impl, cfg=cfg))
+
+    @staticmethod
+    def _decode_impl(params, tokens, caches, pos, *, cfg):
+        return T.decode_step(params, tokens, caches, pos, cfg)
+
+    def _sample(self, logits, key):
+        sc = self.serve_cfg
+        if sc.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / sc.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, *, max_new_tokens: int = 0,
+                 embeds: Optional[np.ndarray] = None) -> np.ndarray:
+        """prompts: (B, S) int32 (audio: (B, K, S)). Returns generated ids
+        (B, n_new) (audio: (B, K, n_new))."""
+        cfg, sc = self.cfg, self.serve_cfg
+        n_new = max_new_tokens or sc.max_new_tokens
+        audio = bool(cfg.num_codebooks)
+        s0 = prompts.shape[-1]
+        prefix = cfg.vlm_num_patches if cfg.mrope else 0
+        buf_len = prefix + s0 + n_new
+        logits, caches = self._prefill(
+            self.params, jnp.asarray(prompts), buf_len=buf_len,
+            embeds=None if embeds is None else jnp.asarray(embeds))
+        if sc.kv_bits:
+            qc, meta = quantize_caches(caches, sc.kv_bits)
+            caches = dequantize_caches(qc, meta)
+        key = jax.random.PRNGKey(sc.seed)
+        outs = []
+        tok = self._sample(logits[:, 0], key)           # (B,) or (B, K)
+        for i in range(n_new):
+            outs.append(np.asarray(tok))
+            step_tok = tok[:, :, None] if audio else tok[:, None]
+            key, sub = jax.random.split(key)
+            logits, caches = self._decode(
+                self.params, step_tok, caches, prefix + s0 + i)
+            tok = self._sample(logits[:, 0] if not audio
+                               else logits[:, 0], sub)
+        arr = np.stack(outs, axis=-1)                   # (B, n) / (B, K, n)
+        return arr

@@ -1,0 +1,166 @@
+"""OSQ applied to the KV cache — the paper's technique as a serving feature.
+
+SQUASH's core move is scalar quantization with segment packing so sub-word
+codes realize their theoretical compression (DESIGN.md §4.ii). A KV cache is
+dimension-structured exactly like the paper's vectors: per-(head, channel)
+value ranges are narrow and stable, so ``bits``-bit codes per channel with
+``32 // bits`` codes packed per int32 lane word give a 4–8× HBM (and, more
+importantly, HBM→VMEM bandwidth) reduction at decode time.
+
+Packing is along the *sequence* axis of each buffer, keeping channel
+extraction a pure shift/mask — the TPU translation of OSQ's dimensional-
+extraction scheme (paper §2.2.2, lanes instead of bytes). Cache leaves are
+identified by name (k/v/latent/k_rope) with the buffer axis located relative
+to the trailing dims, so arbitrarily layer-stacked pytrees work.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_leaf", "dequantize_leaf", "quantize_caches",
+           "dequantize_caches", "cache_bytes",
+           "quantize_leaf_nonuniform", "dequantize_leaf_nonuniform"]
+
+# name → buffer-axis position counted from the END of the shape
+#   k/v     : (..., B, buf, kv, hd) → -3
+#   latent  : (..., B, buf, r)      → -2
+#   k_rope  : (..., B, buf, r)      → -2
+_BUF_AXIS_FROM_END = {"k": 3, "v": 3, "latent": 2, "k_rope": 2}
+
+
+def quantize_leaf(x: jnp.ndarray, bits: int, axis: int):
+    """Pack ``bits``-bit codes along ``axis`` (per-channel lo/scale)."""
+    assert 32 % bits == 0
+    axis = axis % x.ndim
+    per = 32 // bits
+    levels = (1 << bits) - 1
+    lo = x.min(axis=axis, keepdims=True)
+    hi = x.max(axis=axis, keepdims=True)
+    scale = (hi - lo) / levels
+    scale = jnp.where(scale == 0, 1.0, scale)
+    codes = jnp.clip(jnp.round((x - lo) / scale), 0, levels).astype(jnp.uint32)
+    s = x.shape[axis]
+    pad = (-s) % per
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        codes = jnp.pad(codes, widths)
+    g = codes.shape[axis] // per
+    new_shape = (*x.shape[:axis], g, per, *x.shape[axis + 1:])
+    codes = codes.reshape(new_shape)
+    shift_shape = [1] * codes.ndim
+    shift_shape[axis + 1] = per
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * bits).reshape(shift_shape)
+    packed = jnp.sum(codes << shifts, axis=axis + 1, dtype=jnp.uint32)
+    return packed.astype(jnp.int32), (lo, scale, s, x.dtype, bits, axis)
+
+
+def dequantize_leaf(packed: jnp.ndarray, meta) -> jnp.ndarray:
+    lo, scale, s, dtype, bits, axis = meta
+    per = 32 // bits
+    mask = jnp.uint32((1 << bits) - 1)
+    p = jnp.expand_dims(packed.astype(jnp.uint32), axis + 1)
+    shift_shape = [1] * p.ndim
+    shift_shape[axis + 1] = per
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * bits).reshape(shift_shape)
+    codes = (p >> shifts) & mask
+    flat = codes.reshape(*packed.shape[:axis], -1, *packed.shape[axis + 1:])
+    sl = [slice(None)] * flat.ndim
+    sl[axis] = slice(0, s)
+    return (flat[tuple(sl)].astype(jnp.float32) * scale + lo).astype(dtype)
+
+
+def _buf_axis(path, leaf) -> int:
+    name = None
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            name = str(p.key)
+            break
+    off = _BUF_AXIS_FROM_END.get(name or "", 0)
+    if not off:
+        return -1
+    axis = leaf.ndim - off
+    # buffer must be long enough to be worth packing
+    if axis < 0 or leaf.shape[axis] < 16:
+        return -1
+    if not jnp.issubdtype(leaf.dtype, jnp.floating):
+        return -1
+    return axis
+
+
+def quantize_caches(caches, bits: int):
+    """Quantize every KV-like float leaf in a cache pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    out, metas = [], []
+    for path, leaf in flat:
+        axis = _buf_axis(path, leaf)
+        if axis >= 0:
+            q, m = quantize_leaf(leaf, bits, axis)
+            out.append(q)
+            metas.append(m)
+        else:
+            out.append(leaf)
+            metas.append(None)
+    return treedef.unflatten(out), (treedef, metas)
+
+
+def dequantize_caches(qcaches, meta):
+    treedef, metas = meta
+    leaves = treedef.flatten_up_to(qcaches)
+    out = [leaf if m is None else dequantize_leaf(leaf, m)
+           for leaf, m in zip(leaves, metas)]
+    return treedef.unflatten(out)
+
+
+def cache_bytes(caches) -> int:
+    return sum(l.size * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(caches))
+
+
+# ---------------------------------------------------------------------------
+# Non-uniform OSQ-KV: variance-based per-channel bit allocation (paper §2.2).
+# Channels are ranked by their value variance over the buffer; the top
+# ``hi_frac`` get ``hi_bits`` codes, the rest ``lo_bits`` — the serving-side
+# analogue of OSQ's variance-greedy allocation, stored as two packed tensors
+# (each internally uniform, so extraction stays a shift/mask).
+# ---------------------------------------------------------------------------
+
+def quantize_leaf_nonuniform(x: jnp.ndarray, axis: int, *, hi_bits: int = 8,
+                             lo_bits: int = 4, hi_frac: float = 0.5):
+    """Returns ((packed_hi, packed_lo), meta). Channels = trailing dims
+    flattened; variance measured along ``axis`` (the buffer)."""
+    axis = axis % x.ndim
+    ch_shape = x.shape[axis + 1:]
+    nch = 1
+    for s in ch_shape:
+        nch *= s
+    lead = x.shape[:axis]
+    xr = x.reshape(*lead, x.shape[axis], nch)          # (..., S, C)
+    var = jnp.var(xr.astype(jnp.float32), axis=tuple(range(xr.ndim - 1)))
+    n_hi = max(int(nch * hi_frac), 1)
+    order = jnp.argsort(-var)                           # high-variance first
+    hi_idx, lo_idx = order[:n_hi], order[n_hi:]
+    q_hi, m_hi = quantize_leaf(jnp.take(xr, hi_idx, axis=-1), hi_bits,
+                               axis)
+    if lo_idx.shape[0]:
+        q_lo, m_lo = quantize_leaf(jnp.take(xr, lo_idx, axis=-1), lo_bits,
+                                   axis)
+    else:
+        q_lo, m_lo = None, None
+    return (q_hi, q_lo), (m_hi, m_lo, hi_idx, lo_idx, x.shape, axis)
+
+
+def dequantize_leaf_nonuniform(packed, meta) -> jnp.ndarray:
+    (q_hi, q_lo) = packed
+    m_hi, m_lo, hi_idx, lo_idx, shape, axis = meta
+    x_hi = dequantize_leaf(q_hi, m_hi)
+    nch = hi_idx.shape[0] + (lo_idx.shape[0] if lo_idx is not None else 0)
+    out = jnp.zeros((*x_hi.shape[:-1], nch), x_hi.dtype)
+    out = out.at[..., hi_idx].set(x_hi)
+    if q_lo is not None:
+        out = out.at[..., lo_idx].set(dequantize_leaf(q_lo, m_lo))
+    return out.reshape(shape)

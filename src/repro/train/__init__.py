@@ -1,0 +1,5 @@
+"""Training loop substrate: jitted train step, remat, grad accumulation."""
+
+from repro.train.steps import loss_fn, make_train_step
+
+__all__ = ["loss_fn", "make_train_step"]

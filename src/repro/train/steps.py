@@ -1,0 +1,102 @@
+"""Jitted training step: loss → grads → clip → AdamW, with grad accumulation.
+
+``make_train_step(cfg)`` closes over the architecture and returns a function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` that lowers
+cleanly under pjit (all shapes static; batch enters pre-sharded).
+
+Batch layout:
+  text / ssm / moe : {"tokens": (B, S+1) int32}
+  audio            : {"tokens": (B, K, S+1) int32}
+  vlm              : {"tokens": (B, S+1) int32, "embeds": (B, P, d) f32}
+                     (loss masks the P patch-prefix positions)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_update
+
+__all__ = ["loss_fn", "make_train_step"]
+
+
+def loss_fn(params, batch: Dict[str, Any], cfg: ArchConfig, *,
+            remat: bool = True, unroll: bool = False):
+    """Scalar LM loss (mean token CE + router aux)."""
+    tokens = batch["tokens"]
+    embeds = batch.get("embeds")
+    if cfg.num_codebooks:
+        inputs, labels = tokens[:, :, :-1], tokens[:, :, 1:]
+    else:
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    logits, aux = T.forward_train(params, inputs, cfg, embeds=embeds,
+                                  remat=remat, unroll=unroll)
+    if cfg.num_codebooks:
+        # (B, S, K, V) vs labels (B, K, S): mean CE over codebooks.
+        logits = jnp.moveaxis(logits, 2, 1)          # (B, K, S, V)
+        ce = L.cross_entropy_loss(logits, labels)
+    elif cfg.mrope:
+        # Drop the patch-prefix positions; predict text only.
+        p = cfg.vlm_num_patches
+        ce = L.cross_entropy_loss(logits[:, p:], labels)
+    else:
+        ce = L.cross_entropy_loss(logits, labels)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    opt_cfg: Optional[AdamWConfig] = None,
+    lr_schedule: Optional[Callable] = None,
+    *,
+    accum_steps: int = 1,
+    remat: bool = True,
+    unroll: bool = False,
+):
+    """Build the train step. With ``accum_steps > 1`` the batch's leading dim
+    must be divisible by it; microbatches run under ``lax.scan`` and grads
+    are averaged (memory-bound large-batch configs)."""
+    opt_cfg = opt_cfg or AdamWConfig()
+    grad_fn = jax.value_and_grad(
+        lambda p, b: loss_fn(p, b, cfg, remat=remat, unroll=unroll),
+        has_aux=True)
+
+    def split_micro(batch):
+        def sp(x):
+            b = x.shape[0]
+            return x.reshape(accum_steps, b // accum_steps, *x.shape[1:])
+        return jax.tree_util.tree_map(sp, batch)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, parts), grads = grad_fn(params, batch)
+        else:
+            micro = split_micro(batch)
+
+            def body(carry, mb):
+                acc, lsum, asum = carry
+                (l, pp), g = grad_fn(params, mb)
+                acc = jax.tree_util.tree_map(jnp.add, acc, g)
+                return (acc, lsum + l, asum + pp["aux"]), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum, asum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros(()), jnp.zeros(())), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps, gsum)
+            loss = lsum / accum_steps
+            parts = {"ce": loss - asum / accum_steps,
+                     "aux": asum / accum_steps}
+        params, opt_state, om = adamw_update(params, grads, opt_state,
+                                             opt_cfg, lr_schedule)
+        metrics = {"loss": loss, **parts, **om}
+        return params, opt_state, metrics
+
+    return train_step

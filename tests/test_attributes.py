@@ -1,0 +1,92 @@
+"""Attribute quantization + filter mask tests (paper §2.3, Fig. 4)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import attributes as am
+
+
+def _uniform_attrs(n=5000, a=4, card=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, card, size=(n, a)).astype(np.float64)
+
+
+def test_paper_example_lt():
+    """§2.3.1: V = [0,5,10,15,20], a0 < 15 ⇒ R = [1,1,1,0,0]."""
+    attrs = np.repeat(np.array([2.5, 7.5, 12.5, 17.5]), 50)[:, None]
+    idx = am.build_attribute_index(attrs, bits=[2])
+    pred = am.Predicate(attr=0, op="<", lo=15.0)
+    r = am.build_r_lookup(idx, [pred])
+    assert r[:4, 0].tolist() == [1, 1, 1, 0]
+
+
+def test_filter_mask_exact_vs_ground_truth():
+    attrs = _uniform_attrs()
+    idx = am.build_attribute_index(attrs)
+    preds = [
+        am.Predicate(attr=0, op="<=", lo=7.0),
+        am.Predicate(attr=1, op="B", lo=4.0, hi=11.0),
+        am.Predicate(attr=2, op=">", lo=2.0),
+        am.Predicate(attr=3, op="=", lo=5.0),
+    ]
+    r = am.build_r_lookup(idx, preds)
+    f = np.asarray(am.filter_mask(r, idx.codes))
+    gt = am.ground_truth_mask(attrs, preds)
+    np.testing.assert_array_equal(f, gt)
+
+
+def test_in_operator_categorical():
+    attrs = _uniform_attrs(card=8, a=1, seed=3)
+    idx = am.build_attribute_index(attrs)
+    pred = am.Predicate(attr=0, op="IN", values=(1.0, 3.0, 6.0))
+    r = am.build_r_lookup(idx, [pred])
+    f = np.asarray(am.filter_mask(r, idx.codes))
+    gt = am.ground_truth_mask(attrs, [pred])
+    np.testing.assert_array_equal(f, gt)
+
+
+def test_no_predicates_passes_everything():
+    attrs = _uniform_attrs(n=100)
+    idx = am.build_attribute_index(attrs)
+    r = am.build_r_lookup(idx, [])
+    f = np.asarray(am.filter_mask(r, idx.codes))
+    assert f.all()
+
+
+def test_unfiltered_attribute_not_constrained():
+    attrs = _uniform_attrs(n=2000, a=3)
+    idx = am.build_attribute_index(attrs)
+    preds = [am.Predicate(attr=1, op=">=", lo=8.0)]
+    r = am.build_r_lookup(idx, preds)
+    f = np.asarray(am.filter_mask(r, idx.codes))
+    gt = am.ground_truth_mask(attrs, preds)
+    np.testing.assert_array_equal(f, gt)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    card=st.integers(4, 32),
+    op=st.sampled_from(["<", "<=", "=", ">", ">=", "B"]),
+)
+@settings(max_examples=30, deadline=None)
+def test_filter_equals_raw_semantics_property(seed, card, op):
+    """With one cell per distinct value, quantized filtering is exact."""
+    rng = np.random.default_rng(seed)
+    attrs = rng.integers(0, card, size=(1000, 2)).astype(np.float64)
+    idx = am.build_attribute_index(attrs)
+    lo = float(rng.integers(0, card))
+    hi = float(min(card - 1, lo + rng.integers(0, card)))
+    pred = am.Predicate(attr=0, op=op, lo=lo, hi=hi)
+    r = am.build_r_lookup(idx, [pred])
+    f = np.asarray(am.filter_mask(r, idx.codes))
+    gt = am.ground_truth_mask(attrs, [pred])
+    np.testing.assert_array_equal(f, gt)
+
+
+def test_selectivity_targeting():
+    from repro.data.synthetic import default_predicates
+
+    attrs = _uniform_attrs(n=50_000, a=4, card=16, seed=9)
+    preds = default_predicates(attr_cardinality=16, num_attributes=4)
+    sel = am.predicate_selectivity(attrs, preds)
+    assert 0.03 < sel < 0.16, f"joint selectivity {sel} should be ≈8%"

@@ -1,0 +1,76 @@
+"""HNSW baseline correctness: graph invariants + recall on easy data."""
+
+import numpy as np
+import pytest
+
+from repro.core.hnsw import HNSWConfig, HNSWIndex
+from repro.data.synthetic import (default_predicates, ground_truth,
+                                  make_vector_dataset)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_vector_dataset("sift1m", scale=0.002, num_queries=12, seed=1)
+
+
+@pytest.fixture(scope="module")
+def index(ds):
+    return HNSWIndex(ds.vectors, HNSWConfig(m=12, ef_construction=64),
+                     attributes=ds.attributes)
+
+
+def test_graph_degree_bounds(index):
+    cfg = index.config
+    for lvl, adj in enumerate(index._adj):
+        cap = 2 * cfg.m if lvl == 0 else cfg.m
+        for node, nbrs in adj.items():
+            assert len(nbrs) <= cap
+            assert node not in nbrs
+
+
+def test_every_node_reachable_on_layer0(index):
+    adj = index._adj[0]
+    n = index.vectors.shape[0]
+    seen = set()
+    stack = [index._entry]
+    while stack:
+        u = stack.pop()
+        if u in seen:
+            continue
+        seen.add(u)
+        stack.extend(adj.get(u, []))
+    # undirected reachability via reverse edges too
+    if len(seen) < n:
+        rev = {}
+        for u, nbrs in adj.items():
+            for v in nbrs:
+                rev.setdefault(v, []).append(u)
+        stack = list(seen)
+        while stack:
+            u = stack.pop()
+            for v in adj.get(u, []) + rev.get(u, []):
+                if v not in seen:
+                    seen.add(v)
+                    stack.append(v)
+    assert len(seen) >= 0.99 * n, "layer-0 graph must be (near) connected"
+
+
+def test_unfiltered_recall(ds, index):
+    gt, _ = ground_truth(ds, [], k=10)
+    ids, dists = index.search(ds.queries, k=10, ef=96)
+    hits = sum(len(set(ids[i]) & set(gt[i])) for i in range(len(ids)))
+    assert hits / gt.size >= 0.85
+    # distances ascending
+    for row in dists:
+        fin = row[np.isfinite(row)]
+        assert np.all(np.diff(fin) >= -1e-6)
+
+
+def test_filtered_results_satisfy_predicate(ds, index):
+    preds = default_predicates(ds.attr_cardinality)
+    ids, _ = index.search_filtered(ds.queries, preds, k=5, expansion=4)
+    for row in ids:
+        for vid in row:
+            if vid >= 0:
+                for p in preds:
+                    assert p.eval(np.asarray([ds.attributes[vid, p.attr]]))[0]

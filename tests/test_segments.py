@@ -1,0 +1,100 @@
+"""Segment packing / dimensional extraction tests (paper §2.2.1–2.2.2, Fig. 3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import segments
+
+
+def _random_codes(bits, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.stack(
+        [rng.integers(0, 1 << b, size=n) if b else np.zeros(n, np.int64)
+         for b in bits],
+        axis=1,
+    )
+
+
+def test_paper_fig3_style_layout():
+    # Dims spanning segments, as in the paper's Fig. 3 (S=8, D2 split 3+2).
+    bits = [4, 5, 3, 6]
+    layout = segments.build_layout(bits, seg_bits=8)
+    assert layout.total_bits == 18
+    assert layout.num_segments == 3
+    # D2 (index 1) starts at bit 4 and spans segments 0 and 1 (4 + 1 bits).
+    plan = layout.plans[1]
+    assert [p.seg for p in plan] == [0, 1]
+    assert sum(p.nbits for p in plan) == 5
+
+
+def test_segment_count_matches_paper_formula():
+    # Illustrative example from §2.2.1: d=128, S=8, b=512 ⇒ G_OSQ=64, G_SQ=128.
+    bits = [4] * 128
+    layout = segments.build_layout(bits, seg_bits=8)
+    assert layout.num_segments == 64
+    w = segments.sq_wastage(bits, seg_bits=8)
+    assert w["segments_osq"] == 64 and w["segments_sq"] == 128
+    assert w["saving_ratio"] == 2.0
+
+
+def test_pack_extract_roundtrip_s8():
+    bits = [3, 5, 1, 8, 2, 9, 0, 4]
+    layout = segments.build_layout(bits, seg_bits=8)
+    codes = _random_codes(bits, 257)
+    packed = segments.pack_codes(layout, codes)
+    assert packed.dtype == np.uint8
+    out = np.asarray(segments.extract_all(packed, layout))
+    np.testing.assert_array_equal(out, codes)
+
+
+def test_pack_extract_roundtrip_s32():
+    bits = [7, 12, 3, 11, 1, 6]
+    layout = segments.build_layout(bits, seg_bits=32)
+    codes = _random_codes(bits, 100, seed=3)
+    packed = segments.pack_codes(layout, codes)
+    assert packed.dtype == np.uint32
+    out = np.asarray(segments.extract_all(packed, layout))
+    np.testing.assert_array_equal(out, codes)
+
+
+def test_extract_single_dim_matches():
+    bits = [5, 5, 6]
+    layout = segments.build_layout(bits, seg_bits=8)
+    codes = _random_codes(bits, 64, seed=1)
+    packed = segments.pack_codes(layout, codes)
+    for j in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(segments.extract_dim(packed, layout, j)), codes[:, j]
+        )
+
+
+def test_over_segment_dimension():
+    """Paper: a 9-bit dim packs fine with S=8 (the whole point of OSQ)."""
+    bits = [9, 9, 9]
+    layout = segments.build_layout(bits, seg_bits=8)
+    assert layout.num_segments == 4  # ceil(27/8)
+    codes = _random_codes(bits, 50, seed=2)
+    packed = segments.pack_codes(layout, codes)
+    out = np.asarray(segments.extract_all(packed, layout))
+    np.testing.assert_array_equal(out, codes)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    seg_bits=st.sampled_from([8, 16, 32]),
+    d=st.integers(1, 20),
+)
+@settings(max_examples=25, deadline=None)
+def test_roundtrip_property(seed, seg_bits, d):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 13, size=d).tolist()
+    if sum(bits) == 0:
+        bits[0] = 1
+    layout = segments.build_layout(bits, seg_bits=seg_bits)
+    codes = _random_codes(bits, 33, seed=seed)
+    packed = segments.pack_codes(layout, codes)
+    out = np.asarray(segments.extract_all(packed, layout))
+    np.testing.assert_array_equal(out, codes)
+    # OSQ is storage-optimal: wastage < one segment.
+    assert layout.num_segments * seg_bits - layout.total_bits < seg_bits

@@ -1,0 +1,146 @@
+"""Tests for the serverless runtime pieces: Alg. 2 tree, DRE, cost model."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model, dre, invocation
+
+
+# ----------------------------------------------------------------- Algorithm 2
+
+def test_tree_size_formula():
+    # Paper §5.3 configurations: (F, l_max) → N_QA.
+    assert invocation.tree_size(10, 1) == 10
+    assert invocation.tree_size(4, 2) == 20
+    assert invocation.tree_size(4, 3) == 84
+    assert invocation.tree_size(5, 3) == 155
+    assert invocation.tree_size(6, 3) == 258
+    assert invocation.tree_size(4, 4) == 340
+
+
+@pytest.mark.parametrize("f,lmax", [(10, 1), (4, 2), (4, 3), (5, 3), (6, 3), (4, 4)])
+def test_tree_covers_all_ids_exactly_once(f, lmax):
+    tree = invocation.build_tree(f, lmax)
+    n_qa = invocation.tree_size(f, lmax)
+    seen = [kid for kids in tree.values() for kid in kids]
+    assert sorted(seen) == list(range(n_qa)), "every QA invoked exactly once"
+
+
+@pytest.mark.parametrize("f,lmax", [(4, 3), (5, 3), (4, 4)])
+def test_subtree_id_contiguity(f, lmax):
+    """The invariant that enables response routing: the sub-tree rooted at x
+    (next sibling x + J_S) contains exactly the ids y with x < y < x + J_S."""
+    tree = invocation.build_tree(f, lmax)
+
+    def collect(nid):
+        out = []
+        for kid in tree.get(nid, []):
+            out.append(kid)
+            out.extend(collect(kid))
+        return out
+
+    for nid, kids in tree.items():
+        if nid == -1:
+            continue
+        sub = collect(nid)
+        if sub:
+            assert min(sub) == nid + 1
+            assert sorted(sub) == list(range(nid + 1, nid + 1 + len(sub)))
+
+
+def test_fanout_bounded_by_branching_factor():
+    for f, lmax in [(4, 3), (6, 3), (10, 1)]:
+        tree = invocation.build_tree(f, lmax)
+        assert max(len(k) for k in tree.values()) <= f
+
+
+def test_tree_beats_sequential_invocation():
+    sim = invocation.InvocationSim(branching=4, max_level=3)
+    assert sim.makespan() < sim.sequential_makespan() / 5.0
+
+
+# ------------------------------------------------------------------------ DRE
+
+def test_dre_eliminates_repeat_fetches():
+    pool = dre.ContainerPool(warm_prob=1.0, seed=0)
+    for _ in range(10):
+        pool.invoke("sift1m/part0", data_bytes=10_000_000, use_dre=True)
+    assert pool.stats.s3_gets == 1, "warm containers must reuse the singleton"
+    assert pool.stats.dre_hits == 9
+
+
+def test_no_dre_refetches_every_time():
+    pool = dre.ContainerPool(warm_prob=1.0, seed=0)
+    for _ in range(10):
+        pool.invoke("sift1m/part0", data_bytes=10_000_000, use_dre=False)
+    assert pool.stats.s3_gets == 10
+
+
+def test_dre_dataset_mismatch_refetches():
+    pool = dre.ContainerPool(warm_prob=1.0, seed=0)
+    pool.invoke("sift1m/part0", 1000)
+    pool.invoke("gist1m/part0", 1000)  # different dataset in same container
+    assert pool.stats.s3_gets == 2
+
+
+def test_result_cache():
+    cache = dre.ResultCache()
+    from repro.core.attributes import Predicate
+
+    q = np.array([1.0, 2.0])
+    preds = [Predicate(attr=0, op="<", lo=3.0)]
+    key = cache.key(q, preds, 10)
+    assert cache.get(key) is None
+    cache.put(key, ("ids", "dists"))
+    assert cache.get(key) == ("ids", "dists")
+    assert cache.hit_rate == 0.5
+
+
+# ----------------------------------------------------------------- cost model
+
+def test_cost_model_components():
+    fleet = cost_model.LambdaFleet(
+        n_qa=84, n_qp=500, t_qa_s=84 * 0.5, t_qp_s=500 * 0.3, t_co_s=1.0,
+        s3_gets=584, efs_read_bytes=2 * 10 * 128 * 4 * 1000,
+    )
+    c = cost_model.squash_query_cost(fleet)
+    assert c["total"] == pytest.approx(
+        c["lambda_invocation"] + c["lambda_runtime"] + c["s3"] + c["efs"]
+    )
+    # Eq. 5: (N_QA + N_QP + 1) · C_inv
+    assert c["lambda_invocation"] == pytest.approx(585 * 2.0e-7)
+    assert c["lambda_runtime"] > 0
+
+
+def test_serverless_cheaper_at_low_volume_crossover_at_high():
+    """Fig. 8 shape: SQUASH scales with volume, servers are flat — there is a
+    crossover somewhere in the millions of queries/day."""
+    fleet = cost_model.LambdaFleet(
+        n_qa=84, n_qp=400, t_qa_s=84 * 0.4, t_qp_s=400 * 0.25, t_co_s=1.0,
+        s3_gets=484, efs_read_bytes=20 * 512 * 1000,
+    )
+    per_batch = cost_model.squash_query_cost(fleet)["total"]  # 1000 queries
+    volumes = [10_000, 100_000, 1_000_000, 10_000_000, 100_000_000]
+    squash_daily = cost_model.daily_cost_curve(per_batch, 1000, volumes)
+    server_daily = cost_model.server_baseline_cost(hours=24.0)
+    assert squash_daily[0] < server_daily, "cheap at low volume"
+    assert squash_daily[-1] > server_daily, "servers win at huge volume"
+    # Paper §5.4: crossover around 1M–3.5M queries/day for the large server;
+    # our synthetic fleet times put it within an order of magnitude of that.
+    crossover = next(v for v, c in zip(volumes, squash_daily) if c > server_daily)
+    assert 1_000_000 <= crossover <= 100_000_000
+
+
+@given(
+    n_qa=st.integers(1, 500), n_qp=st.integers(0, 2000),
+    t=st.floats(0.0, 10.0),
+)
+@settings(max_examples=25, deadline=None)
+def test_cost_monotonicity(n_qa, n_qp, t):
+    base = cost_model.LambdaFleet(n_qa=n_qa, n_qp=n_qp, t_qa_s=t, t_qp_s=t)
+    more = cost_model.LambdaFleet(n_qa=n_qa + 1, n_qp=n_qp, t_qa_s=t, t_qp_s=t)
+    assert (
+        cost_model.squash_query_cost(more)["total"]
+        >= cost_model.squash_query_cost(base)["total"]
+    )
