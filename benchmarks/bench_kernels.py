@@ -40,6 +40,33 @@ def run(quick: bool = True) -> dict:
     np.testing.assert_allclose(out_k, out_r, rtol=1e-5, atol=1e-5)
     rows.append({"kernel": "adc_lookup", "t_pallas_interp": t_k, "t_ref": t_r})
 
+    # Batched (multi-query × stacked-partition) kernels — the data-plane
+    # shapes from core/dataplane.py. Pallas interpret vs jnp XLA twin.
+    qn, pn = (16, 4) if quick else (64, 10)
+    qs = rng.integers(0, 2 ** 32, size=(qn, pn, g), dtype=np.uint32)
+    dbs = rng.integers(0, 2 ** 32, size=(pn, n, g), dtype=np.uint32)
+    out_k, t_k = timed(lambda: np.asarray(ops.hamming_stacked(
+        jnp.asarray(qs), jnp.asarray(dbs), use_pallas=True, interpret=True)),
+        repeats=2)
+    out_r, t_r = timed(lambda: np.asarray(ops.hamming_stacked(
+        jnp.asarray(qs), jnp.asarray(dbs), use_pallas=False)), repeats=2)
+    assert np.array_equal(out_k, out_r)
+    rows.append({"kernel": "hamming_stacked", "t_pallas_interp": t_k,
+                 "t_ref": t_r})
+
+    b, keep = (8, 32) if quick else (64, 64)
+    tables_b = rng.random((b, m1, d)).astype(np.float32)
+    codes_b = rng.integers(0, m1, size=(b, keep, d)).astype(np.int32)
+    out_k, t_k = timed(lambda: np.asarray(ops.adc_batch(
+        jnp.asarray(tables_b), jnp.asarray(codes_b), use_pallas=True,
+        interpret=True)), repeats=2)
+    out_r, t_r = timed(lambda: np.asarray(ops.adc_batch(
+        jnp.asarray(tables_b), jnp.asarray(codes_b), use_pallas=False)),
+        repeats=2)
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-5, atol=1e-5)
+    rows.append({"kernel": "adc_batch", "t_pallas_interp": t_k,
+                 "t_ref": t_r})
+
     bits = osq.allocate_bits(rng.random(d) + 0.1, 4 * d)
     layout = segments.build_layout(bits, seg_bits=8)
     codes2 = np.stack([rng.integers(0, 2 ** b if b else 1, size=n)

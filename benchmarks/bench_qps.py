@@ -21,9 +21,42 @@ from repro.core import attributes as am, partitions as pm
 from repro.core.invocation import InvocationSim, tree_size
 from repro.core.pipeline import SquashConfig, SquashIndex
 from repro.data.synthetic import default_predicates, make_vector_dataset
+from repro.serve.vector_service import ServiceConfig, VectorSearchService
 
 FAAS_CONFIGS = {10: (10, 1), 20: (4, 2), 84: (4, 3), 155: (5, 3),
                 258: (6, 3), 340: (4, 4)}
+
+BACKEND_BATCH = 64  # Q for the numpy-vs-jax data-plane shootout
+
+
+def backend_shootout(quick: bool) -> dict:
+    """Single-host data-plane comparison: numpy loop vs batched jax plane.
+
+    Same index, same Q=64 query batch, same predicates — wall time per
+    backend (jax timed post-trace, i.e. DRE-warm), identical-ids check.
+    """
+    scale = 0.005 if quick else 0.02
+    ds = make_vector_dataset("sift1m", scale=scale, num_queries=BACKEND_BATCH)
+    preds = default_predicates(ds.attr_cardinality)
+    idx = SquashIndex.build(ds.vectors, ds.attributes,
+                            SquashConfig(num_partitions=10))
+    svc = VectorSearchService(idx, ServiceConfig(backend="auto"))
+    svc.warmup(BACKEND_BATCH)                        # trace the jax plane
+    repeats = 3
+    for _ in range(repeats):
+        ids_j, _, _ = svc.query(ds.queries, preds, backend="jax")
+        ids_n, _, _ = svc.query(ds.queries, preds, backend="numpy")
+    qps_np, qps_jax = svc.qps("numpy"), svc.qps("jax")
+    row = {
+        "n": ds.n, "queries": BACKEND_BATCH,
+        "qps_numpy": qps_np, "qps_jax": qps_jax,
+        "speedup": qps_jax / max(qps_np, 1e-9),
+        "ids_identical": bool(np.array_equal(ids_j, ids_n)),
+    }
+    print(f"  backends @Q={BACKEND_BATCH}: numpy={qps_np:8.0f} qps  "
+          f"jax={qps_jax:8.0f} qps  ({row['speedup']:.1f}x, ids "
+          f"{'identical' if row['ids_identical'] else 'DIVERGED'})")
+    return row
 
 
 def measure_stage_times(preset: str, quick: bool):
@@ -80,6 +113,7 @@ def run(quick: bool = True) -> dict:
     presets = ["sift1m", "gist1m"] if quick else ["sift1m", "gist1m",
                                                   "sift10m", "deep10m"]
     out = []
+    backends = backend_shootout(quick)
     for preset in presets:
         meas = measure_stage_times(preset, quick)
         best = None
@@ -99,8 +133,8 @@ def run(quick: bool = True) -> dict:
         print(f"  {preset:8s} best FaaS QPS={best['qps']:.0f} (N_QA="
               f"{best['n_qa']}), server-8core QPS={server_qps:.0f} → "
               f"{best['qps'] / server_qps:.1f}x")
-    save_json("bench_qps", {"rows": out})
-    return {"rows": out}
+    save_json("bench_qps", {"rows": out, "backend_shootout": backends})
+    return {"rows": out, "backend_shootout": backends}
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
 """Benchmark driver: one section per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--skip-roofline]
+  PYTHONPATH=src python -m benchmarks.run --smoke   # tiny post-test gate
 
 Paper-artifact map (DESIGN.md §6):
   Fig. 2  → bench_compression     Fig. 6  → bench_dre
@@ -19,15 +20,79 @@ import subprocess
 import sys
 import time
 
+# Path bootstrap: make `repro` importable from a bare checkout
+# (`python -m benchmarks.run --smoke` without PYTHONPATH=src).
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+
+def smoke() -> int:
+    """Tiny-shape sanity gate: both query data planes, asserted parity.
+
+    Builds a small index, runs identical query batches through the numpy
+    and jax backends (selective + empty predicates), and asserts identical
+    ids plus equal recall against brute force. Intended as a fast
+    post-test CI step: ``python -m benchmarks.run --smoke``.
+    """
+    import jax
+    import numpy as np
+
+    jax.config.update("jax_enable_x64", True)
+
+    from repro.core.attributes import Predicate
+    from repro.core.pipeline import SquashConfig, SquashIndex
+    from repro.data import synthetic
+
+    t0 = time.time()
+    ds = synthetic.make_vector_dataset("sift1m", scale=0.004, num_queries=16,
+                                       seed=7)
+    preds = synthetic.default_predicates(ds.attr_cardinality)
+    cfg = SquashConfig(num_partitions=6, kmeans_iters=4, lloyd_iters=6)
+    idx = SquashIndex.build(ds.vectors, ds.attributes, cfg, seed=7)
+    gt_ids, _ = synthetic.ground_truth(ds, preds, k=10)
+
+    recalls = {}
+    results = {}
+    for backend in ("numpy", "jax"):
+        ids, dists, stats = idx.search(ds.queries, preds, k=10,
+                                       backend=backend)
+        results[backend] = (ids, dists, stats)
+        per_q = []
+        for qi in range(ds.queries.shape[0]):
+            g = set(gt_ids[qi][gt_ids[qi] >= 0].tolist())
+            if g:
+                per_q.append(len(g & set(ids[qi].tolist())) / len(g))
+        recalls[backend] = float(np.mean(per_q))
+    ids_n, _, stats_n = results["numpy"]
+    ids_j, _, stats_j = results["jax"]
+    assert np.array_equal(ids_n, ids_j), "backend ids diverged"
+    assert recalls["numpy"] == recalls["jax"], f"recall drift: {recalls}"
+    assert stats_n == stats_j, f"stats drift: {stats_n} vs {stats_j}"
+
+    empty = [Predicate(attr=0, op="=", lo=1e9)]
+    for backend in ("numpy", "jax"):
+        ids, _, _ = idx.search(ds.queries[:4], empty, k=5, backend=backend)
+        assert (ids == -1).all(), f"{backend}: empty predicate leaked ids"
+
+    print(f"[smoke] OK in {time.time() - t0:.1f}s — recall@10="
+          f"{recalls['jax']:.3f}, ids identical across backends")
+    return 0
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="full-size runs (default: quick)")
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny both-backends parity gate, then exit")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names")
     args = ap.parse_args(argv)
+    if args.smoke:
+        return smoke()
     quick = not args.full
 
     from benchmarks import (bench_ablations, bench_baselines, bench_caching,

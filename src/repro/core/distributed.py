@@ -11,220 +11,54 @@ The serverless topology maps onto the mesh:
   then one ``all_gather`` over ``model`` + merge produces global results — the
   MPI-style reduce of §2.4.5 on the ICI collective tree.
 
-Everything inside :func:`distributed_search` is jittable with fixed shapes;
-the dynamic stages (predicate parsing, Algorithm 1) run on host and enter as
-dense masks, mirroring how QAs ship bitmaps to QPs in request payloads.
+Stages 3–5 inside the shard body are the **same batched data plane** the
+single-host jax backend uses (``repro.core.dataplane.batched_stage345``) —
+each shard simply runs it over its local partition stack, so single-host and
+distributed search cannot drift apart. The dynamic stages (predicate parsing,
+Algorithm 1) run on host and enter as dense masks plus per-(query, partition)
+keep/take counts, mirroring how QAs ship bitmaps to QPs in request payloads.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import dataplane
+from repro.core.dataplane import StackedIndex, stack_index
 from repro.core.pipeline import SquashIndex
 
-__all__ = ["StackedIndex", "stack_index", "local_topk", "distributed_search",
+try:  # jax >= 0.6 exports shard_map at top level
+    from jax import shard_map as _shard_map_raw
+
+    _REP_KWARG = "check_vma"
+except ImportError:  # jax 0.4.x keeps it in experimental
+    from jax.experimental.shard_map import shard_map as _shard_map_raw
+
+    _REP_KWARG = "check_rep"
+
+
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    # Replication checking rejects the data-dependent masks; both jax
+    # generations disable it under a different kwarg name.
+    return _shard_map_raw(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **{_REP_KWARG: False})
+
+__all__ = ["StackedIndex", "stack_index", "distributed_search",
            "make_search_fn"]
-
-
-@dataclasses.dataclass
-class StackedIndex:
-    """All partitions stacked to a fixed row budget (leading axis = partition).
-
-    Padding rows have ``valid=False`` and never reach the results. This is the
-    payload a QP shard holds resident (the DRE singleton, in HBM terms).
-    """
-
-    low_packed: jnp.ndarray   # (P, n_max, G32) uint32
-    codes: jnp.ndarray        # (P, n_max, d) int32
-    vectors: jnp.ndarray      # (P, n_max, d) float32
-    valid: jnp.ndarray        # (P, n_max) bool
-    vector_ids: jnp.ndarray   # (P, n_max) int32
-    part_mean: jnp.ndarray    # (P, d)
-    klt: jnp.ndarray          # (P, d, d)
-    low_mean: jnp.ndarray     # (P, d)
-    low_std: jnp.ndarray      # (P, d)
-    boundaries: jnp.ndarray   # (P, M+1, d) float32 (+inf padding)
-    cells: jnp.ndarray        # (P, d) int32
-
-    @property
-    def num_partitions(self) -> int:
-        return int(self.low_packed.shape[0])
-
-    @property
-    def n_max(self) -> int:
-        return int(self.low_packed.shape[1])
-
-
-jax.tree_util.register_dataclass(
-    StackedIndex,
-    data_fields=[f.name for f in dataclasses.fields(StackedIndex)],
-    meta_fields=[],
-)
-
-
-def stack_index(index: SquashIndex, pad_to_multiple: int = 1) -> StackedIndex:
-    """Stack a built :class:`SquashIndex` into fixed-shape device arrays."""
-    parts = index.parts
-    p = len(parts)
-    pad_p = -(-p // pad_to_multiple) * pad_to_multiple
-    n_max = max(pt.size for pt in parts)
-    d = index.dim
-    g32 = parts[0].low.packed.shape[1]
-    m1 = max(pt.quant.boundaries.shape[0] for pt in parts)
-
-    def zeros(shape, dtype):
-        return np.zeros(shape, dtype=dtype)
-
-    low_packed = zeros((pad_p, n_max, g32), np.uint32)
-    codes = zeros((pad_p, n_max, d), np.int32)
-    vectors = zeros((pad_p, n_max, d), np.float32)
-    valid = zeros((pad_p, n_max), bool)
-    vector_ids = np.full((pad_p, n_max), -1, np.int32)
-    part_mean = zeros((pad_p, d), np.float32)
-    klt = np.tile(np.eye(d, dtype=np.float32), (pad_p, 1, 1))
-    low_mean = zeros((pad_p, d), np.float32)
-    low_std = np.ones((pad_p, d), np.float32)
-    boundaries = np.full((pad_p, m1, d), np.inf, np.float32)
-    cells = np.ones((pad_p, d), np.int32)
-
-    for i, pt in enumerate(parts):
-        n = pt.size
-        low_packed[i, :n] = pt.low.packed
-        codes[i, :n] = pt.codes
-        vectors[i, :n] = pt.vectors
-        valid[i, :n] = True
-        vector_ids[i, :n] = pt.vector_ids
-        part_mean[i] = pt.mean
-        if pt.klt is not None:
-            klt[i] = pt.klt.astype(np.float32)
-        low_mean[i] = pt.low.mean
-        low_std[i] = np.maximum(pt.low.std, 1e-12)
-        mb = pt.quant.boundaries.shape[0]
-        boundaries[i, :mb] = pt.quant.boundaries.astype(np.float32)
-        cells[i] = pt.quant.cells
-    return StackedIndex(
-        low_packed=jnp.asarray(low_packed),
-        codes=jnp.asarray(codes),
-        vectors=jnp.asarray(vectors),
-        valid=jnp.asarray(valid),
-        vector_ids=jnp.asarray(vector_ids),
-        part_mean=jnp.asarray(part_mean),
-        klt=jnp.asarray(klt),
-        low_mean=jnp.asarray(low_mean),
-        low_std=jnp.asarray(low_std),
-        boundaries=jnp.asarray(boundaries),
-        cells=jnp.asarray(cells),
-    )
-
-
-def _pack_query_bits(z: jnp.ndarray) -> jnp.ndarray:
-    """Binarize (already standardized) query and pack into uint32 words."""
-    d = z.shape[-1]
-    g = -(-d // 32)
-    bits = (z > 0).astype(jnp.uint32)
-    bits = jnp.pad(bits, (0, g * 32 - d))
-    bits = bits.reshape(g, 32)
-    weights = (jnp.uint32(1) << jnp.arange(31, -1, -1, dtype=jnp.uint32))
-    return jnp.sum(bits * weights, axis=-1, dtype=jnp.uint32)
-
-
-def _adc_table(qt: jnp.ndarray, boundaries: jnp.ndarray, cells: jnp.ndarray
-               ) -> jnp.ndarray:
-    """jnp twin of ``adc.build_adc_table`` (padding cells → 0, never selected)."""
-    m1, d = boundaries.shape
-    inner = boundaries[1:]                                   # (M, d)
-    qcell = jnp.sum((inner <= qt[None, :]) & jnp.isfinite(inner), axis=0)
-    cell_idx = jnp.arange(m1)[:, None]
-    right = jnp.concatenate([boundaries[1:], jnp.full((1, d), jnp.inf)], axis=0)
-    left = boundaries
-    diff = jnp.where(
-        cell_idx < qcell[None, :],
-        qt[None, :] - right,
-        jnp.where(cell_idx > qcell[None, :], left - qt[None, :], 0.0),
-    )
-    sq = jnp.where(jnp.isfinite(diff), diff * diff, 0.0)
-    return jnp.where(cell_idx >= cells[None, :], 0.0, sq)
-
-
-def local_topk(
-    query: jnp.ndarray,
-    stacked: StackedIndex,
-    cand_mask: jnp.ndarray,
-    *,
-    k: int,
-    ham_keep: int,
-    refine_k: int,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """One query × one partition-stack shard → (k ids, k dists). Jittable.
-
-    Stages 3–5 of §2.4 with fixed shapes: Hamming prune to ``ham_keep``, ADC
-    LB distances, full-precision refinement of ``refine_k``, local top-k.
-    ``cand_mask`` is (P, n_max) — filter ∧ residency ∧ Alg.-1 visit decision.
-    """
-
-    def one_partition(lp, codes, vecs, valid, vids, mean, klt, lmean, lstd,
-                      bounds, cells, cmask):
-        n_max = lp.shape[0]
-        cand = cmask & valid
-        # --- low-bit Hamming prune (raw centered space) ------------------
-        zq = (query - mean - lmean) / lstd
-        qbits = _pack_query_bits(zq)
-        x = jnp.bitwise_xor(lp, qbits[None, :])
-        ham = jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
-        big = jnp.int32(1 << 30)
-        ham = jnp.where(cand, ham, big)
-        keep = min(ham_keep, n_max)
-        neg, sel = jax.lax.top_k(-ham, keep)                  # (keep,)
-        kept_alive = (-neg) < big
-        # --- ADC LB distances on survivors -------------------------------
-        qt = (query - mean) @ klt
-        table = _adc_table(qt, bounds, cells)                 # (M+1, d)
-        kept_codes = codes[sel]                               # (keep, d)
-        picked = jnp.take_along_axis(table, kept_codes, axis=0)
-        lb = jnp.sqrt(jnp.sum(picked, axis=-1))
-        lb = jnp.where(kept_alive, lb, jnp.inf)
-        rk = min(refine_k, keep)
-        neg_lb, sel2 = jax.lax.top_k(-lb, rk)
-        rows = sel[sel2]
-        alive2 = jnp.isfinite(-neg_lb)
-        # --- full-precision refinement ('EFS' rows live in the shard) ----
-        full = vecs[rows]                                     # (rk, d)
-        exact = jnp.sqrt(jnp.sum((full - query[None, :]) ** 2, axis=-1))
-        exact = jnp.where(alive2, exact, jnp.inf)
-        kk = min(k, rk)
-        neg_e, sel3 = jax.lax.top_k(-exact, kk)
-        out_ids = vids[rows[sel3]]
-        out_d = -neg_e
-        out_ids = jnp.where(jnp.isfinite(out_d), out_ids, -1)
-        if kk < k:
-            out_ids = jnp.pad(out_ids, (0, k - kk), constant_values=-1)
-            out_d = jnp.pad(out_d, (0, k - kk), constant_values=jnp.inf)
-        return out_ids, out_d
-
-    ids, dists = jax.vmap(one_partition)(
-        stacked.low_packed, stacked.codes, stacked.vectors, stacked.valid,
-        stacked.vector_ids, stacked.part_mean, stacked.klt, stacked.low_mean,
-        stacked.low_std, stacked.boundaries, stacked.cells, cand_mask,
-    )                                                         # (P, k) each
-    flat_d = dists.reshape(-1)
-    flat_i = ids.reshape(-1)
-    neg, sel = jax.lax.top_k(-flat_d, k)
-    return flat_i[sel], -neg
 
 
 def make_search_fn(
     mesh: Mesh,
     *,
     k: int,
-    ham_keep: int,
-    refine_k: int,
+    keep_s: int,
+    take_s: int,
+    refine: bool = True,
     data_axes=("data",),
     model_axis: str = "model",
 ):
@@ -233,40 +67,40 @@ def make_search_fn(
     Inputs (global shapes):
       queries     (Q, d)        — sharded over data axes
       cand_mask   (Q, P, n_max) — filter ∧ residency ∧ visit (from Alg. 1)
+      keep, take  (Q, P) int32  — per-pair dynamic stage counts
       stacked     StackedIndex  — partition axis sharded over ``model``
-    Output: ids (Q, k) int32, dists (Q, k) f32 — sharded like queries.
-    """
-    from jax import shard_map
+    Output: ids (Q, k) int32, dists (Q, k) float — sharded like queries.
 
+    ``keep_s``/``take_s`` are the static top_k sizes (see
+    ``dataplane.static_counts``).
+    """
     dq = data_axes if len(data_axes) > 1 else data_axes[0]
     query_spec = P(dq)                       # (Q, d): Q over data axes
-    mask_spec = P(dq, model_axis)            # (Q, P, n_max)
+    mask_spec = P(dq, model_axis)            # (Q, P, n_max) / (Q, P)
     treedef_box = {}
 
-    def _shard_body(queries, cand_mask, *stacked_leaves):
+    def _shard_body(queries, cand_mask, keep, take, *stacked_leaves):
         stacked = jax.tree_util.tree_unflatten(treedef_box["td"], stacked_leaves)
-
-        def per_query(q, cm):
-            return local_topk(
-                q, stacked, cm, k=k, ham_keep=ham_keep, refine_k=refine_k
-            )
-
-        ids, dists = jax.vmap(per_query)(queries, cand_mask)   # (Qs, k)
+        # Local batched Stage 3–5 over this shard's partition stack.
+        ids, dists = dataplane.batched_stage345(
+            queries, stacked, cand_mask, keep, take,
+            k=k, keep_s=keep_s, take_s=take_s, refine=refine,
+        )                                                       # (Qs, k)
         # Single-pass MPI-style reduce over the model axis (§2.4.5).
         all_ids = jax.lax.all_gather(ids, model_axis, axis=1, tiled=True)
         all_d = jax.lax.all_gather(dists, model_axis, axis=1, tiled=True)
         neg, sel = jax.lax.top_k(-all_d, k)
         return jnp.take_along_axis(all_ids, sel, axis=1), -neg
 
-    def search(queries, cand_mask, stacked: StackedIndex):
+    def search(queries, cand_mask, keep, take, stacked: StackedIndex):
         leaves, treedef_box["td"] = jax.tree_util.tree_flatten(stacked)
-        in_specs = (query_spec, mask_spec, *(P(model_axis) for _ in leaves))
+        in_specs = (query_spec, mask_spec, mask_spec, mask_spec,
+                    *(P(model_axis) for _ in leaves))
         out_specs = (query_spec, query_spec)
-        fn = shard_map(
+        fn = _shard_map(
             _shard_body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_vma=False,
         )
-        return jax.jit(fn)(queries, cand_mask, *leaves)
+        return jax.jit(fn)(queries, cand_mask, keep, take, *leaves)
 
     return search
 
@@ -283,18 +117,20 @@ def distributed_search(
     """Host-orchestrated distributed hybrid search (QA plane + QP plane).
 
     Runs the dynamic stages (predicate parse → filter mask → Algorithm 1) on
-    host, then dispatches the jitted shard_map kernel.
+    host, then dispatches the jitted shard_map kernel. Results match
+    ``index.search`` (either backend) bit-for-bit on ids up to cross-shard
+    padding of the partition axis.
     """
     from repro.core import attributes as am, partitions as pm
 
-    queries = np.atleast_2d(np.asarray(queries, dtype=np.float32))
+    queries = np.atleast_2d(np.asarray(queries, dtype=np.float64))
     qn = queries.shape[0]
     cfg = index.config
     r = am.build_r_lookup(index.attr_index, predicates)
     f_one = np.asarray(am.filter_mask(r, index.attr_index.codes))
     f = np.broadcast_to(f_one, (qn, f_one.shape[0]))
     visit, cands = pm.select_partitions(
-        queries.astype(np.float64), index.partitioning.centroids, f,
+        queries, index.partitioning.centroids, f,
         index.partitioning.assign, index.partitioning.threshold, k,
     )
 
@@ -302,33 +138,31 @@ def distributed_search(
         devs = np.array(jax.devices()[:1]).reshape(1, 1)
         mesh = Mesh(devs, (data_axes[0], model_axis))
 
+    dtype = np.float64 if jax.config.jax_enable_x64 else np.float32
     model_size = int(np.prod([mesh.shape[a] for a in (model_axis,)]))
-    stacked = stack_index(index, pad_to_multiple=model_size)
+    stacked = stack_index(index, pad_to_multiple=model_size, dtype=dtype)
     p, n_max = stacked.num_partitions, stacked.n_max
 
-    # Dense candidate mask (Q, P, n_max): visit ∧ filter ∧ residency.
-    cand_mask = np.zeros((qn, p, n_max), dtype=bool)
-    for qi in range(qn):
-        for pid, rows in cands[qi].items():
-            cand_mask[qi, pid, rows] = True
+    # Dense per-(query, partition) payloads: mask + dynamic stage counts.
+    cand_mask, n_cand = dataplane.build_cand_arrays(cands, qn, p, n_max)
+    keep, take = dataplane.stage_counts(n_cand, cfg, k)
+    keep_s, take_s = dataplane.static_counts(n_max, cfg, k)
 
     data_size = int(np.prod([mesh.shape[a] for a in data_axes]))
     pad_q = -(-qn // data_size) * data_size
     if pad_q != qn:
         queries = np.pad(queries, ((0, pad_q - qn), (0, 0)))
         cand_mask = np.pad(cand_mask, ((0, pad_q - qn), (0, 0), (0, 0)))
+        keep = np.pad(keep, ((0, pad_q - qn), (0, 0)))
+        take = np.pad(take, ((0, pad_q - qn), (0, 0)))
 
-    n_cand = max(int(cand_mask.sum(axis=(1, 2)).max()), 1)
-    ham_keep = min(
-        n_max,
-        max(min(cfg.min_hamming_keep, n_max),
-            int(np.ceil(n_max * cfg.hamming_perc / 100.0))),
-    )
-    refine_k = min(int(np.ceil(cfg.refine_ratio * k)), ham_keep)
     search = make_search_fn(
-        mesh, k=k, ham_keep=ham_keep, refine_k=refine_k,
+        mesh, k=k, keep_s=keep_s, take_s=take_s, refine=cfg.enable_refine,
         data_axes=data_axes, model_axis=model_axis,
     )
     with mesh:
-        ids, dists = search(jnp.asarray(queries), jnp.asarray(cand_mask), stacked)
+        ids, dists = search(
+            jnp.asarray(queries, dtype), jnp.asarray(cand_mask),
+            jnp.asarray(keep), jnp.asarray(take), stacked,
+        )
     return np.asarray(ids)[:qn], np.asarray(dists)[:qn]

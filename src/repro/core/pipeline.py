@@ -9,8 +9,19 @@ selection → per-partition: low-bit Hamming prune → ADC lookup-table LB
 distances → optional R·k full-precision post-refinement → single-pass
 MPI-style top-k merge.
 
-This module is the single-host reference engine (NumPy build + jnp query
-math); ``repro.core.distributed`` shards the same stages over a TPU mesh and
+Two query data planes execute Stages 3–5, selected by
+``SquashConfig.backend`` (or per-call via ``search(..., backend=...)``):
+
+* ``"numpy"`` — the per-query reference loop in this module: per visited
+  partition, NumPy stage math with deterministic (score, row) tie-breaking.
+* ``"jax"`` — the batched plane in ``repro.core.dataplane``: all queries ×
+  all partitions stacked to fixed shapes, jit-compiled end to end (one trace
+  per (Q, k, index shape)), kernels dispatched via ``repro.kernels.ops``
+  (Pallas on TPU, XLA twins on CPU). Returns bitwise-identical ids to the
+  NumPy plane; the dynamic per-(query, partition) keep/take counts are
+  computed on host and applied as masks inside the traced function.
+
+``repro.core.distributed`` shards the same batched plane over a TPU mesh and
 ``repro.serve`` drives it under the simulated serverless runtime.
 """
 
@@ -24,6 +35,8 @@ import numpy as np
 from repro.core import adc, attributes as attr_mod, lowbit, osq, partitions, segments
 
 __all__ = ["SquashConfig", "PartitionIndex", "SquashIndex", "SearchStats"]
+
+BACKENDS = ("numpy", "jax")
 
 
 @dataclasses.dataclass
@@ -43,6 +56,7 @@ class SquashConfig:
     max_bits_per_dim: int = 12
     enable_refine: bool = True
     min_hamming_keep: int = 64         # floor so tiny candidate sets survive
+    backend: str = "numpy"             # Stage 3–5 data plane: numpy | jax
 
 
 @dataclasses.dataclass
@@ -104,6 +118,13 @@ class SquashIndex:
         self.parts = parts
         self.attr_index = attr_index
         self.dim = dim
+        # jax-backend caches: stacked device payload per dtype, jitted plane
+        # per (k, keep_s, take_s, refine). jit itself caches per (Q, d) shape,
+        # so each (Q, k, index shape) traces exactly once (see
+        # ``_trace_counter``, asserted by the backend-parity tests).
+        self._stacked_cache: Dict = {}
+        self._plane_cache: Dict = {}
+        self._trace_counter = [0]
 
     # ------------------------------------------------------------------ build
 
@@ -177,8 +198,18 @@ class SquashIndex:
         predicates: Sequence[attr_mod.Predicate],
         k: int = 10,
         collect_stats: bool = False,
+        backend: Optional[str] = None,
     ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
-        """Batched hybrid top-k. Returns (ids (Q,k), dists (Q,k), stats)."""
+        """Batched hybrid top-k. Returns (ids (Q,k), dists (Q,k), stats).
+
+        ``backend`` overrides ``config.backend`` for this call: ``"numpy"``
+        runs the per-query reference loop, ``"jax"`` the batched jitted data
+        plane (identical ids, same stats counters).
+        """
+        backend = backend or self.config.backend
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; expected "
+                             f"{BACKENDS}")
         queries = np.atleast_2d(np.asarray(queries, dtype=np.float64))
         qn = queries.shape[0]
         stats = SearchStats(queries=qn)
@@ -200,22 +231,103 @@ class SquashIndex:
         )
         stats.partitions_visited += int(visit.sum())
 
+        if backend == "jax":
+            return self._search_jax(queries, cands, k, stats)
+        return self._search_numpy(queries, cands, k, stats)
+
+    def _search_numpy(
+        self,
+        queries: np.ndarray,
+        cands,
+        k: int,
+        stats: SearchStats,
+    ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
+        """Reference Stage 3–5 plane: per-query loop over visited partitions.
+
+        Candidate streams are consumed in ascending-partition order and every
+        sort is stable, so ties resolve as (score, partition, row) — exactly
+        the order ``lax.top_k`` produces in the jax plane.
+        """
+        qn = queries.shape[0]
         all_ids = np.full((qn, k), -1, dtype=np.int64)
         all_dists = np.full((qn, k), np.inf, dtype=np.float64)
         for qi in range(qn):
             heap: List[Tuple[float, int]] = []
-            for pid, local_rows in cands[qi].items():
+            for pid in sorted(cands[qi]):
                 ids, dists = self._search_partition(
-                    self.parts[pid], queries[qi], local_rows, k, stats
+                    self.parts[pid], queries[qi], cands[qi][pid], k, stats
                 )
                 heap.extend(zip(dists.tolist(), ids.tolist()))
             # Single-pass MPI-style reduce: merge per-partition local top-k.
-            heap.sort()
+            # Stable sort on distance alone keeps (partition, rank) tie order.
+            heap.sort(key=lambda t: t[0])
             top = heap[:k]
             for r_i, (dist, vid) in enumerate(top):
                 all_ids[qi, r_i] = vid
                 all_dists[qi, r_i] = dist
         return all_ids, all_dists, stats
+
+    def _search_jax(
+        self,
+        queries: np.ndarray,
+        cands,
+        k: int,
+        stats: SearchStats,
+    ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
+        """Batched Stage 3–5 plane (repro.core.dataplane), jitted end to end.
+
+        Host side prepares dense masks + per-(query, partition) keep/take
+        counts; one jitted call executes Hamming prune, ADC lower bounds,
+        refinement and the cross-partition merge for the whole batch.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core import dataplane
+
+        cfg = self.config
+        qn = queries.shape[0]
+        dtype = np.float64 if jax.config.jax_enable_x64 else np.float32
+        stacked = self._stacked_cache.get(dtype)
+        if stacked is None:
+            stacked = dataplane.stack_index(self, dtype=dtype)
+            self._stacked_cache[dtype] = stacked
+        p, n_max = stacked.num_partitions, stacked.n_max
+
+        cand_mask, n_cand = dataplane.build_cand_arrays(cands, qn, p, n_max)
+        keep, take = dataplane.stage_counts(n_cand, cfg, k)
+        keep_s, take_s = dataplane.static_counts(n_max, cfg, k)
+
+        # Bucket Q to the next power of two so a service seeing naturally
+        # varying batch sizes pays O(log Q) traces, not one per size. Padded
+        # queries are dead (keep=0, empty mask) and sliced off below.
+        bucket = 1 << (qn - 1).bit_length() if qn > 1 else 1
+        if bucket != qn:
+            pad = bucket - qn
+            queries = np.pad(queries, ((0, pad), (0, 0)))
+            cand_mask = np.pad(cand_mask, ((0, pad), (0, 0), (0, 0)))
+            keep = np.pad(keep, ((0, pad), (0, 0)))
+            take = np.pad(take, ((0, pad), (0, 0)))
+        key = (k, keep_s, take_s, cfg.enable_refine)
+        plane = self._plane_cache.get(key)
+        if plane is None:
+            plane = dataplane.make_plane(
+                k=k, keep_s=keep_s, take_s=take_s, refine=cfg.enable_refine,
+                trace_counter=self._trace_counter,
+            )
+            self._plane_cache[key] = plane
+        ids, dists = plane(
+            jnp.asarray(queries, dtype), stacked, jnp.asarray(cand_mask),
+            jnp.asarray(keep), jnp.asarray(take),
+        )
+        ids, dists = ids[:qn], dists[:qn]
+        stats.hamming_in += int(n_cand.sum())
+        stats.hamming_kept += int(keep.sum())
+        stats.adc_evals += int(keep.sum())
+        if cfg.enable_refine:
+            stats.refined += int(take.sum())
+        return (np.asarray(ids, dtype=np.int64),
+                np.asarray(dists, dtype=np.float64), stats)
 
     def _search_partition(
         self,
@@ -240,7 +352,13 @@ class SquashIndex:
             int(np.ceil(local_rows.size * cfg.hamming_perc / 100.0)),
         )
         keep = min(keep, local_rows.size)
-        kept_sel = np.argpartition(ham, keep - 1)[:keep]
+        # Total-order composite key (ham, row): keeps the O(n) argpartition
+        # while resolving ties by ascending row — the order the jax plane's
+        # lax.top_k produces, required for backend id parity.
+        n_c = local_rows.size
+        comp = ham.astype(np.int64) * n_c + np.arange(n_c)
+        kept_sel = np.argpartition(comp, keep - 1)[:keep]
+        kept_sel = kept_sel[np.argsort(comp[kept_sel])]
         kept_rows = local_rows[kept_sel]
         stats.hamming_kept += keep
 
@@ -253,8 +371,7 @@ class SquashIndex:
 
         take = min(int(np.ceil(cfg.refine_ratio * k)), keep) if cfg.enable_refine \
             else min(k, keep)
-        order = np.argpartition(lb, take - 1)[:take]
-        order = order[np.argsort(lb[order])]
+        order = np.argsort(lb, kind="stable")[:take]
         cand = kept_rows[order]
 
         if cfg.enable_refine:
@@ -262,7 +379,7 @@ class SquashIndex:
             full = part.vectors[cand]
             exact = np.sqrt(((full - query[None, :]) ** 2).sum(axis=1))
             stats.refined += cand.size
-            fin = np.argsort(exact)[:k]
+            fin = np.argsort(exact, kind="stable")[:k]
             return part.vector_ids[cand[fin]], exact[fin]
         return part.vector_ids[cand[:k]], lb[order][:k]
 

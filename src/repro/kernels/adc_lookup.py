@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["adc_kernel", "adc_lb_distances"]
+__all__ = ["adc_kernel", "adc_lb_distances", "adc_batch_kernel",
+           "adc_lb_distances_batch"]
 
 BLOCK_N = 256
 BLOCK_D = 16
@@ -93,4 +94,73 @@ def adc_lb_distances(table, codes, *, interpret: bool = False,
         interpret=interpret,
     )(codes, table.astype(jnp.float32))
     out = out[:n]
+    return jnp.sqrt(out) if sqrt else out
+
+
+def adc_batch_kernel(codes_ref, table_ref, out_ref):
+    """One (batch, row-block, dim-block) step of the batched ADC lookup.
+
+    codes_ref: (1, BLOCK_N, BLOCK_D) int32 cell indices for this batch item.
+    table_ref: (1, M1, BLOCK_D) f32 — this batch item's lookup-table columns.
+    out_ref:   (1, BLOCK_N,) f32 accumulator over the dim-block grid axis.
+    """
+    codes = codes_ref[0]
+    table = table_ref[0]                          # (M1, BD)
+    m1 = table.shape[0]
+    onehot = (codes[:, :, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, m1), 2)).astype(table.dtype)
+    flat = onehot.reshape(codes.shape[0], -1)     # (BN, BD*M1)
+    tflat = table.T.reshape(-1)                   # (BD*M1,)
+    partial = jnp.dot(flat, tflat, preferred_element_type=jnp.float32)
+    dstep = pl.program_id(2)
+
+    @pl.when(dstep == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += partial[None, :]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("interpret", "block_n", "block_d", "sqrt")
+)
+def adc_lb_distances_batch(tables, codes, *, interpret: bool = False,
+                           block_n: int = BLOCK_N, block_d: int = BLOCK_D,
+                           sqrt: bool = True):
+    """LB distances for a batch of (query×partition) lookup problems.
+
+    The batched query data plane evaluates one per-(query, partition) table
+    against that pair's Hamming-surviving code rows; the grid walks
+    (batch, row-block, dim-block) so every (table, codes) pair streams once.
+
+    Args:
+      tables: (B, M+1, d) f32 per-pair boundary-distance tables (finite
+        entries only — callers zero the +inf padding).
+      codes: (B, N, d) int32 quantized cells of each pair's survivors.
+    Returns:
+      (B, N) f32 LB distances (``sqrt=False`` for the squared form).
+    """
+    b, n, d = codes.shape
+    m1 = tables.shape[1]
+    bn = min(block_n, max(int(n), 1))
+    bd = min(block_d, d)
+    pad_n = (-n) % bn
+    pad_d = (-d) % bd
+    if pad_n or pad_d:
+        codes = jnp.pad(codes, ((0, 0), (0, pad_n), (0, pad_d)))
+        tables = jnp.pad(tables, ((0, 0), (0, 0), (0, pad_d)))
+    np_, dp = codes.shape[1], codes.shape[2]
+    grid = (b, np_ // bn, dp // bd)
+    out = pl.pallas_call(
+        adc_batch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn, bd), lambda b_, i, j: (b_, i, j)),
+            pl.BlockSpec((1, m1, bd), lambda b_, i, j: (b_, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda b_, i, j: (b_, i)),
+        out_shape=jax.ShapeDtypeStruct((b, np_), jnp.float32),
+        interpret=interpret,
+    )(codes, tables.astype(jnp.float32))
+    out = out[:, :n]
     return jnp.sqrt(out) if sqrt else out

@@ -1,8 +1,18 @@
-"""Pallas TPU kernel: packed binary Hamming distance (paper §2.4.3).
+"""Pallas TPU kernels: packed binary Hamming distance (paper §2.4.3).
 
 XOR + popcount over uint32 segment words — 32 dimensions per VPU lane. The
 query's packed words are tiny and broadcast to every grid step; the database
 is BlockSpec-tiled over rows so each block's codes stream HBM→VMEM once.
+
+Two entry points:
+
+* :func:`packed_hamming` — one query vs one code matrix (the seed kernel).
+* :func:`packed_hamming_stacked` — the batched query data plane's shape:
+  per-(query, partition) packed query words ``(Q, P, G)`` against a stacked
+  partition code tensor ``(P, N, G)`` → ``(Q, P, N)``. The grid walks
+  (query-block, partition, row-block); each db row block is re-used across
+  the whole query-block axis, so codes stream HBM→VMEM once per Q/BLOCK_Q
+  rather than once per query.
 
 Target: TPU (VPU popcount); validated on CPU via ``interpret=True``.
 """
@@ -15,9 +25,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["hamming_kernel", "packed_hamming"]
+__all__ = ["hamming_kernel", "packed_hamming", "hamming_stacked_kernel",
+           "packed_hamming_stacked", "packed_hamming_multi"]
 
 BLOCK_N = 512  # rows per grid step; G (words/row) rides along un-tiled.
+BLOCK_Q = 8    # queries per grid step in the multi-query kernel.
 
 
 def hamming_kernel(q_ref, db_ref, out_ref):
@@ -26,7 +38,7 @@ def hamming_kernel(q_ref, db_ref, out_ref):
     db = db_ref[...]                     # (BLOCK_N, G)
     x = jnp.bitwise_xor(db, q)           # broadcast over rows
     pc = jax.lax.population_count(x).astype(jnp.int32)
-    out_ref[...] = jnp.sum(pc, axis=-1)
+    out_ref[...] = jnp.sum(pc, axis=-1, dtype=jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
@@ -58,3 +70,71 @@ def packed_hamming(q_packed, db_packed, *, interpret: bool = False,
         interpret=interpret,
     )(q_packed[None, :], db_packed)
     return out[:n]
+
+
+def hamming_stacked_kernel(q_ref, db_ref, out_ref):
+    """One (query-block, partition, row-block) step.
+
+    q_ref:   (BQ, 1, G) uint32 — per-(query, this partition) packed words.
+    db_ref:  (1, BN, G) uint32 — this partition's code rows.
+    out_ref: (BQ, 1, BN) int32.
+    """
+    q = q_ref[...]                        # (BQ, 1, G)
+    db = db_ref[...]                      # (1, BN, G)
+    x = jnp.bitwise_xor(db, q[:, 0, :][:, None, :])       # (BQ, BN, G)
+    pc = jax.lax.population_count(x).astype(jnp.int32)
+    out_ref[...] = jnp.sum(pc, axis=-1, dtype=jnp.int32)[:, None, :]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("interpret", "block_n", "block_q")
+)
+def packed_hamming_stacked(q_packed, db_packed, *, interpret: bool = False,
+                           block_n: int = BLOCK_N, block_q: int = BLOCK_Q):
+    """Batched Hamming distances for the stacked multi-partition data plane.
+
+    Args:
+      q_packed: (Q, P, G) uint32 — packed query bits, already standardized in
+        each partition's binarization space (one word row per (query, part)).
+      db_packed: (P, N, G) uint32 — stacked per-partition code rows (N padded
+        to the partition row budget; padding rows are masked by the caller).
+    Returns:
+      (Q, P, N) int32 distances.
+    """
+    qn, p, g = q_packed.shape
+    n = db_packed.shape[1]
+    bq = min(block_q, max(int(qn), 1))
+    bn = min(block_n, max(int(n), 1))
+    pad_q = (-qn) % bq
+    pad_n = (-n) % bn
+    if pad_q:
+        q_packed = jnp.pad(q_packed, ((0, pad_q), (0, 0), (0, 0)))
+    if pad_n:
+        db_packed = jnp.pad(db_packed, ((0, 0), (0, pad_n), (0, 0)))
+    qp, np_ = q_packed.shape[0], db_packed.shape[1]
+    grid = (qp // bq, p, np_ // bn)
+    out = pl.pallas_call(
+        hamming_stacked_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, 1, g), lambda i, j, l: (i, j, 0)),
+            pl.BlockSpec((1, bn, g), lambda i, j, l: (j, l, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, 1, bn), lambda i, j, l: (i, j, l)),
+        out_shape=jax.ShapeDtypeStruct((qp, p, np_), jnp.int32),
+        interpret=interpret,
+    )(q_packed, db_packed)
+    return out[:qn, :, :n]
+
+
+def packed_hamming_multi(q_packed, db_packed, *, interpret: bool = False,
+                         block_n: int = BLOCK_N, block_q: int = BLOCK_Q):
+    """(Q, G) queries vs one (N, G) code matrix → (Q, N) distances.
+
+    Thin single-partition view of :func:`packed_hamming_stacked`.
+    """
+    out = packed_hamming_stacked(
+        q_packed[:, None, :], db_packed[None], interpret=interpret,
+        block_n=block_n, block_q=block_q,
+    )
+    return out[:, 0, :]

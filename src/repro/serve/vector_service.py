@@ -1,0 +1,90 @@
+"""Vector-search serving facade: QA-style request routing over SquashIndex.
+
+The simulated serverless runtime (examples/, benchmarks/) talks to the index
+through this service rather than calling ``SquashIndex.search`` directly, so
+the data-plane backend becomes a deployment decision:
+
+* ``backend="numpy"`` — per-query reference loop (debug / tiny batches).
+* ``backend="jax"``   — batched jitted plane (the production hot path).
+* ``backend="auto"``  — route by batch size: single-query lookups take the
+  loop (no trace/dispatch overhead), real batches take the batched plane.
+
+The service also plays the QueryAllocator's accounting role: it accumulates
+:class:`~repro.core.pipeline.SearchStats` across requests and tracks wall
+time per backend, which ``benchmarks/bench_qps.py`` reads for the
+numpy-vs-jax shootout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import attributes as attr_mod
+from repro.core.pipeline import SearchStats, SquashIndex
+
+__all__ = ["ServiceConfig", "VectorSearchService"]
+
+_AUTO_BATCH_THRESHOLD = 4  # ≥ this many queries → batched jax plane
+
+
+@dataclasses.dataclass
+class ServiceConfig:
+    backend: str = "auto"              # numpy | jax | auto
+    default_k: int = 10
+
+
+class VectorSearchService:
+    """One QueryAllocator front-end bound to a resident SquashIndex."""
+
+    def __init__(self, index: SquashIndex, config: Optional[ServiceConfig] = None):
+        self.index = index
+        self.config = config or ServiceConfig()
+        if self.config.backend not in ("numpy", "jax", "auto"):
+            raise ValueError(f"unknown backend {self.config.backend!r}")
+        self.stats = SearchStats()
+        self.requests = 0
+        self.wall_s: Dict[str, float] = {"numpy": 0.0, "jax": 0.0}
+        self.queries_served: Dict[str, int] = {"numpy": 0, "jax": 0}
+
+    def resolve_backend(self, num_queries: int) -> str:
+        if self.config.backend != "auto":
+            return self.config.backend
+        return "jax" if num_queries >= _AUTO_BATCH_THRESHOLD else "numpy"
+
+    def warmup(self, num_queries: int, k: Optional[int] = None) -> None:
+        """Pre-trace the jax plane for a batch shape (DRE-style warm start)."""
+        k = k or self.config.default_k
+        q = np.zeros((num_queries, self.index.dim))
+        self.index.search(q, [], k=k, backend="jax")
+
+    def query(
+        self,
+        queries: np.ndarray,
+        predicates: Sequence[attr_mod.Predicate] = (),
+        k: Optional[int] = None,
+        backend: Optional[str] = None,
+    ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
+        """Serve one request batch; returns (ids, dists, per-request stats)."""
+        queries = np.atleast_2d(np.asarray(queries, dtype=np.float64))
+        k = k or self.config.default_k
+        chosen = (self.resolve_backend(queries.shape[0])
+                  if backend in (None, "auto") else backend)
+        t0 = time.perf_counter()
+        ids, dists, stats = self.index.search(
+            queries, list(predicates), k=k, backend=chosen
+        )
+        dt = time.perf_counter() - t0
+        self.requests += 1
+        self.stats.merge(stats)
+        self.wall_s[chosen] += dt
+        self.queries_served[chosen] += queries.shape[0]
+        return ids, dists, stats
+
+    def qps(self, backend: str) -> float:
+        """Served-queries-per-second for one backend (0 if unused)."""
+        t = self.wall_s.get(backend, 0.0)
+        return self.queries_served.get(backend, 0) / t if t > 0 else 0.0

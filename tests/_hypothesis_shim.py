@@ -1,0 +1,166 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+Seven test modules use ``from hypothesis import given, settings, strategies``
+for property-based sweeps. This container does not ship hypothesis, and the
+tier-1 gate forbids installing it — so ``tests/conftest.py`` installs this shim
+into ``sys.modules`` *only when the real library is absent*. When hypothesis
+is available it is used untouched and this module is never imported.
+
+The shim degrades property tests to fixed-example parametrization: each
+``@given`` test is executed ``max_examples`` times (from ``@settings``, default
+10) with arguments drawn from a ``numpy`` Generator seeded by the test's
+qualified name — the same examples on every run, on every machine. Only the
+strategy surface the suite actually uses is implemented: ``integers``,
+``floats``, ``sampled_from``, ``booleans``, plus ``assume``.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+import zlib
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies", "assume", "install",
+           "HealthCheck"]
+
+
+class _Strategy:
+    """Base class: a strategy is just a deterministic draw(rng) -> value."""
+
+    def draw(self, rng: np.random.Generator):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value=None, max_value=None):
+        self.lo = -(2 ** 31) if min_value is None else int(min_value)
+        self.hi = 2 ** 31 - 1 if max_value is None else int(max_value)
+
+    def draw(self, rng):
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _Floats(_Strategy):
+    def __init__(self, min_value=None, max_value=None, **_kwargs):
+        self.lo = -1e6 if min_value is None else float(min_value)
+        self.hi = 1e6 if max_value is None else float(max_value)
+
+    def draw(self, rng):
+        return float(rng.uniform(self.lo, self.hi))
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from requires a non-empty collection")
+
+    def draw(self, rng):
+        return self.elements[int(rng.integers(0, len(self.elements)))]
+
+
+class _Booleans(_Strategy):
+    def draw(self, rng):
+        return bool(rng.integers(0, 2))
+
+
+class _AssumptionFailed(Exception):
+    """Raised by assume(False); the example is skipped, not failed."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _AssumptionFailed()
+    return True
+
+
+class HealthCheck:
+    """API-compat placeholder (the shim enforces no health checks)."""
+
+    all = classmethod(lambda cls: [])
+    too_slow = data_too_large = filter_too_much = None
+
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class settings:  # noqa: N801 — mirrors the hypothesis API name
+    """Decorator recording run parameters; composes with @given in any order."""
+
+    def __init__(self, max_examples: int = _DEFAULT_MAX_EXAMPLES,
+                 deadline=None, **_kwargs):
+        self.max_examples = int(max_examples)
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._shim_settings = self
+        return fn
+
+
+def _seed_for(name: str) -> int:
+    return zlib.crc32(name.encode("utf-8")) & 0x7FFFFFFF
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Run the test on a fixed, seed-deterministic batch of drawn examples."""
+    if arg_strategies:
+        raise TypeError("the shim supports keyword strategies only "
+                        "(matching this repo's test suite)")
+
+    def decorate(fn):
+        inner_settings = getattr(fn, "_shim_settings", None)
+
+        @functools.wraps(fn)
+        def wrapper():
+            cfg = (getattr(wrapper, "_shim_settings", None)
+                   or inner_settings or settings())
+            rng = np.random.default_rng(
+                _seed_for(f"{fn.__module__}.{fn.__qualname__}"))
+            ran = 0
+            attempts = 0
+            while ran < cfg.max_examples and attempts < cfg.max_examples * 50:
+                attempts += 1
+                example = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(**example)
+                except _AssumptionFailed:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({fn.__qualname__}): {example}"
+                    ) from e
+                ran += 1
+
+        # Hide the strategy parameters from pytest's fixture resolution.
+        wrapper.__signature__ = inspect.Signature()
+        wrapper.hypothesis_shim = True
+        return wrapper
+
+    return decorate
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _Integers
+strategies.floats = _Floats
+strategies.sampled_from = _SampledFrom
+strategies.booleans = _Booleans
+strategies.SearchStrategy = _Strategy
+
+
+def install() -> None:
+    """Register the shim as ``hypothesis`` in sys.modules (idempotent)."""
+    if "hypothesis" in sys.modules:
+        return
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strategies
+    mod.assume = assume
+    mod.HealthCheck = HealthCheck
+    mod.__shim__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 
 from repro.core import lowbit, osq, segments
 from repro.core.adc import build_adc_table
-from repro.kernels import ops, ref
+from repro.kernels import adc_lookup, hamming, ops, ref
 
 
 # ------------------------------------------------------------------- hamming
@@ -101,6 +101,94 @@ def test_adc_kernel_property(seed):
     got = np.asarray(ops.adc_distances(jnp.asarray(table), jnp.asarray(codes),
                                        interpret=True, sqrt=False))
     want = np.asarray(ref.adc_lb_ref(table, codes, sqrt=False))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------- batched (multi-query) variants
+
+@pytest.mark.parametrize("q,p,n", [(1, 1, 1), (3, 2, 7), (9, 4, 513),
+                                   (2, 3, 515)])
+@pytest.mark.parametrize("g", [1, 5])
+def test_hamming_stacked_sweep(q, p, n, g):
+    """Padding edges: N not a multiple of block_n, Q not of block_q,
+    single-row/single-query inputs."""
+    rng = np.random.default_rng(q * 131 + p * 17 + n + g)
+    qs = rng.integers(0, 2**32, size=(q, p, g), dtype=np.uint32)
+    db = rng.integers(0, 2**32, size=(p, n, g), dtype=np.uint32)
+    got = np.asarray(hamming.packed_hamming_stacked(
+        jnp.asarray(qs), jnp.asarray(db), interpret=True, block_n=256,
+        block_q=4))
+    want = np.asarray(ref.hamming_stacked_ref(jnp.asarray(qs),
+                                              jnp.asarray(db)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_hamming_multi_matches_per_query_kernel():
+    rng = np.random.default_rng(3)
+    qs = rng.integers(0, 2**32, size=(6, 3), dtype=np.uint32)
+    db = rng.integers(0, 2**32, size=(40, 3), dtype=np.uint32)
+    got = np.asarray(hamming.packed_hamming_multi(
+        jnp.asarray(qs), jnp.asarray(db), interpret=True, block_n=16))
+    for qi in range(6):
+        row = np.asarray(ops.hamming_distances(
+            jnp.asarray(qs[qi]), jnp.asarray(db), interpret=True))
+        np.testing.assert_array_equal(got[qi], row)
+
+
+@given(seed=st.integers(0, 2**31 - 1), q=st.integers(1, 12),
+       p=st.integers(1, 5), n=st.integers(1, 300))
+@settings(max_examples=10, deadline=None)
+def test_hamming_stacked_property(seed, q, p, n):
+    rng = np.random.default_rng(seed)
+    g = int(rng.integers(1, 8))
+    qs = rng.integers(0, 2**32, size=(q, p, g), dtype=np.uint32)
+    db = rng.integers(0, 2**32, size=(p, n, g), dtype=np.uint32)
+    got = np.asarray(hamming.packed_hamming_stacked(
+        jnp.asarray(qs), jnp.asarray(db), interpret=True))
+    np.testing.assert_array_equal(got, np.asarray(
+        ref.hamming_stacked_ref(jnp.asarray(qs), jnp.asarray(db))))
+
+
+@pytest.mark.parametrize("b,n,d,m1", [(1, 1, 1, 2), (3, 33, 17, 9),
+                                      (5, 257, 24, 12)])
+def test_adc_batch_sweep(b, n, d, m1):
+    """Padding edges: N not a multiple of block_n, d not of block_d,
+    single-row inputs."""
+    rng = np.random.default_rng(b + n + d + m1)
+    tables = rng.exponential(size=(b, m1, d)).astype(np.float32)
+    codes = rng.integers(0, m1, size=(b, n, d)).astype(np.int32)
+    got = np.asarray(adc_lookup.adc_lb_distances_batch(
+        jnp.asarray(tables), jnp.asarray(codes), interpret=True, block_n=64,
+        block_d=8))
+    want = np.asarray(ref.adc_lb_batch_ref(tables, codes))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_adc_batch_matches_per_pair_kernel():
+    rng = np.random.default_rng(11)
+    tables = rng.exponential(size=(4, 9, 24)).astype(np.float32)
+    codes = rng.integers(0, 9, size=(4, 64, 24)).astype(np.int32)
+    got = np.asarray(adc_lookup.adc_lb_distances_batch(
+        jnp.asarray(tables), jnp.asarray(codes), interpret=True))
+    for bi in range(4):
+        row = np.asarray(ops.adc_distances(
+            jnp.asarray(tables[bi]), jnp.asarray(codes[bi]), interpret=True))
+        np.testing.assert_allclose(got[bi], row, rtol=1e-5, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_adc_batch_property(seed):
+    rng = np.random.default_rng(seed)
+    b = int(rng.integers(1, 6))
+    n = int(rng.integers(1, 120))
+    d = int(rng.integers(1, 40))
+    m1 = int(rng.integers(2, 24))
+    tables = rng.exponential(size=(b, m1, d)).astype(np.float32)
+    codes = rng.integers(0, m1, size=(b, n, d)).astype(np.int32)
+    got = np.asarray(adc_lookup.adc_lb_distances_batch(
+        jnp.asarray(tables), jnp.asarray(codes), interpret=True, sqrt=False))
+    want = np.asarray(ref.adc_lb_batch_ref(tables, codes, sqrt=False))
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
