@@ -45,3 +45,23 @@ def recall_at_k(found_ids: np.ndarray, gt_ids: np.ndarray) -> float:
 
 def header(title: str):
     print(f"\n{'=' * 72}\n{title}\n{'=' * 72}")
+
+
+def build_tiny_squash_index(*, scale: float = 0.003, num_queries: int = 16,
+                            num_partitions: int = 6, seed: int = 3):
+    """Small dataset + predicates + built SquashIndex for runtime benches.
+
+    Returns (dataset, predicates, index) — the shared fixture of
+    bench_invocation / bench_dre / bench_cost.
+    """
+    from repro.core.pipeline import SquashConfig, SquashIndex
+    from repro.data.synthetic import default_predicates, make_vector_dataset
+
+    ds = make_vector_dataset("sift1m", scale=scale, num_queries=num_queries,
+                             seed=seed)
+    preds = default_predicates(ds.attr_cardinality)
+    idx = SquashIndex.build(
+        ds.vectors, ds.attributes,
+        SquashConfig(num_partitions=num_partitions, kmeans_iters=4,
+                     lloyd_iters=6), seed=seed)
+    return ds, preds, idx

@@ -76,8 +76,25 @@ def smoke() -> int:
         ids, _, _ = idx.search(ds.queries[:4], empty, k=5, backend=backend)
         assert (ids == -1).all(), f"{backend}: empty predicate leaked ids"
 
+    # Serverless-runtime gate: the full Coordinator → QA → QP path over the
+    # same tiny index must return the jax plane's ids bit-for-bit and emit
+    # latency / payload / DRE / cost traces.
+    from repro.serverless import RuntimeConfig, ServerlessRuntime
+
+    rt = ServerlessRuntime(idx, RuntimeConfig(branching=3, max_level=2))
+    res = rt.search(ds.queries, preds, k=10)
+    assert np.array_equal(res.ids, ids_j), "serverless runtime ids diverged"
+    assert res.stats == stats_j, (
+        f"serverless stats drift: {res.stats} vs {stats_j}")
+    tr = res.trace
+    assert tr.makespan_s > 0 and tr.payload_bytes > 0
+    assert tr.cost["total"] > 0 and tr.dre.invocations > 0
+    assert tr.invocations("qa") == 12 and tr.invocations("co") == 1
+
     print(f"[smoke] OK in {time.time() - t0:.1f}s — recall@10="
-          f"{recalls['jax']:.3f}, ids identical across backends")
+          f"{recalls['jax']:.3f}, ids identical across numpy/jax/serverless; "
+          f"runtime: {tr.invocations('qa')} QA + {tr.invocations('qp')} QP, "
+          f"${tr.cost['total']:.6f}/batch")
     return 0
 
 

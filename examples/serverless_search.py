@@ -1,28 +1,26 @@
-"""End-to-end serverless hybrid search driver (the paper's system, simulated).
+"""End-to-end serverless hybrid search driver (the paper's system, executed).
 
     PYTHONPATH=src python examples/serverless_search.py
 
-Drives batched hybrid queries through the full SQUASH runtime:
+Drives batched hybrid queries through the real serverless runtime
+(``repro.serverless``): the Coordinator fans out over the Alg. 2 ID-jump
+tree, each QueryAllocator runs attribute filtering + Alg. 1 partition
+selection (with the §2.5 filter-count guarantee) on its query slice, each
+QueryProcessor executes Stages 3–5 of the batched jax data plane on its
+partition shard, and results merge back up the tree. Payload bytes are
+budgeted against the Lambda 6 MB cap, warm containers reuse their index
+singletons (DRE, §3.2), and the run is priced by the §3.5 cost model.
 
-  Coordinator → tree-based QA invocation (Alg. 2) → per-QA attribute
-  filtering + Alg. 1 partition selection → QP shard search on a jax mesh
-  (the QP plane: partitions over the 'model' axis, queries over 'data') →
-  single-pass top-k merge → DRE warm-container accounting → §3.5 cost model.
-
-Prints recall, simulated serverless latency/QPS, and dollars per 1k queries.
+Prints recall, cold/warm makespans, QPS, DRE savings and dollars per 1k
+queries — and checks the runtime's ids against the single-host jax plane.
 """
-
-import time
 
 import numpy as np
 
-from repro.core.cost_model import LambdaFleet, squash_query_cost
-from repro.core.distributed import distributed_search
-from repro.core.dre import ContainerPool
-from repro.core.invocation import InvocationSim, tree_size
 from repro.core.pipeline import SquashConfig, SquashIndex
 from repro.data.synthetic import (default_predicates, ground_truth,
                                   make_vector_dataset)
+from repro.serverless import RuntimeConfig, ServerlessRuntime
 
 N_QA_F, N_QA_L = 4, 3          # F=4, l_max=3 → N_QA = 84 (paper sweet spot)
 
@@ -33,45 +31,42 @@ def main():
     idx = SquashIndex.build(ds.vectors, ds.attributes,
                             SquashConfig(num_partitions=10))
 
-    # --- QP plane: mesh-sharded search (1 real device here; the same code
-    # lowers onto the 16×16 production mesh in launch/dryrun.py) ----------
-    t0 = time.perf_counter()
-    ids, dists = distributed_search(idx, ds.queries, preds, k=10)
-    t_search = time.perf_counter() - t0
+    rt = ServerlessRuntime(idx, RuntimeConfig(
+        branching=N_QA_F, max_level=N_QA_L, warm_prob=0.95))
+    cold = rt.search(ds.queries, preds, k=10)      # cold fleet
+    warm = rt.search(ds.queries, preds, k=10)      # warm containers + DRE
+
     gt_ids, _ = ground_truth(ds, preds, k=10)
-    hits = sum(len(set(ids[i]) & set(gt_ids[i])) for i in range(len(ids)))
+    hits = sum(len(set(warm.ids[i]) & set(gt_ids[i]))
+               for i in range(len(warm.ids)))
     recall = hits / gt_ids.size
 
-    # --- control plane: Alg. 2 invocation + DRE + cost -------------------
-    n_qa = tree_size(N_QA_F, N_QA_L)
-    sim = InvocationSim(branching=N_QA_F, max_level=N_QA_L, node_compute=0.02)
-    t_tree = sim.makespan()
-    # one warm pool per QP function (squash-processor-<pid>), as in §3.2
-    pools = [ContainerPool(warm_prob=0.95, seed=pid) for pid in range(10)]
-    for wave in range(3):                       # 3 successive batches
-        for pid, pool in enumerate(pools):
-            pool.invoke(f"sift1m/part{pid}", 35_000_000, use_dre=True)
-    qps = ds.queries.shape[0] / (t_tree + t_search / 10)  # 10 parallel QPs
-    s3_gets = sum(p.stats.s3_gets for p in pools)
-    dre_hits = sum(p.stats.dre_hits for p in pools)
-    invocations = sum(p.stats.invocations for p in pools)
-    fleet = LambdaFleet(n_qa=n_qa, n_qp=10 * 3,
-                        t_qa_s=n_qa * 0.3, t_qp_s=30 * t_search / 10,
-                        t_co_s=t_tree,
-                        s3_gets=s3_gets,
-                        efs_read_bytes=int(50 * 2 * 10 * ds.d * 4))
-    cost = squash_query_cost(fleet)
+    # The runtime must agree bit-for-bit with the single-host jax plane.
+    ids_ref, _, _ = idx.search(ds.queries, preds, k=10, backend="jax")
+    assert np.array_equal(warm.ids, ids_ref), "runtime diverged from jax plane"
 
-    print(f"recall@10           = {recall:.3f}")
-    print(f"tree launch (84 QA) = {t_tree * 1e3:.0f} ms")
-    print(f"mesh search         = {t_search * 1e3:.0f} ms "
+    t = warm.trace
+    qps = ds.queries.shape[0] / t.makespan_s
+    cost_per_1k = t.cost["total"] * 1000 / ds.queries.shape[0]
+    print(f"recall@10            = {recall:.3f}")
+    print(f"fleet                = 1 CO + {t.invocations('qa')} QA + "
+          f"{t.invocations('qp')} QP invocations "
+          f"(N_QA={t.invocations('qa')}, F={N_QA_F}, l_max={N_QA_L})")
+    print(f"makespan cold → warm = {cold.trace.makespan_s * 1e3:.0f} ms → "
+          f"{t.makespan_s * 1e3:.0f} ms "
           f"({ds.queries.shape[0]} queries)")
-    print(f"simulated QPS       = {qps:.0f}")
-    print(f"DRE                 : {s3_gets} S3 GETs for "
-          f"{invocations} invocations ({dre_hits} warm-container hits)")
-    print(f"cost per 1k queries = ${cost['total'] * 1000 / 50:.4f} "
-          f"(λ-runtime {cost['lambda_runtime'] / cost['total']:.0%})")
+    print(f"simulated QPS        = {qps:.0f}")
+    print(f"DRE                  : {t.dre.s3_gets} S3 GETs for "
+          f"{t.dre.invocations} invocations ({t.dre.dre_hits} singleton hits;"
+          f" cold wave paid {cold.trace.dre.s3_gets})")
+    print(f"payload moved        = {t.payload_bytes / 1e6:.2f} MB "
+          f"(≤ {rt.cfg.max_payload_bytes // 2**20} MB per invocation)")
+    print(f"escalated visits     = {t.escalations} (§2.5 filter-count "
+          f"guarantee)")
+    print(f"cost per 1k queries  = ${cost_per_1k:.4f} "
+          f"(λ-runtime {t.cost['lambda_runtime'] / t.cost['total']:.0%})")
     assert recall >= 0.9
+    assert t.dre.s3_gets < cold.trace.dre.s3_gets
 
 
 if __name__ == "__main__":

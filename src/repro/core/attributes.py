@@ -29,13 +29,20 @@ _OPS = ("<", "<=", "=", ">", ">=", "B", "IN")
 
 @dataclasses.dataclass(frozen=True)
 class Predicate:
-    """One per-attribute constraint: (attr, op, operands) — Def. 1 triple."""
+    """One per-attribute constraint: (attr, op, operands) — Def. 1 triple.
+
+    ``group`` forms disjunct groups: predicates sharing a (non-None) group id
+    on the same attribute are OR-combined before the cross-group AND cascade.
+    A group must stay within one attribute — the filter array R factorizes
+    per attribute, so cross-attribute disjunction cannot be represented.
+    """
 
     attr: int
     op: str
     lo: float = 0.0
     hi: float = 0.0
     values: Tuple[float, ...] = ()
+    group: Optional[int] = None
 
     def __post_init__(self):
         if self.op not in _OPS:
@@ -139,23 +146,54 @@ def build_r_lookup(
     """Compile predicates to the binary cell-satisfaction array R (Fig. 4 step 1).
 
     Returns (M+1, A) uint8 — R[c, a] = 1 iff quantization cell c of attribute a
-    satisfies the (single) predicate on a; attributes without predicates are
-    all-1. Cells are tested on their representative value (centers), which is
-    exact when each distinct attribute value owns a cell.
+    satisfies the predicates on a; attributes without predicates are all-1.
+    Cells are tested on their representative value (centers), which is exact
+    when each distinct attribute value owns a cell. Predicates sharing a
+    ``group`` id are OR-combined (disjunct group), groups and ungrouped
+    predicates AND together.
     """
     m1, a = index.boundaries.shape
     r = np.ones((m1, a), dtype=np.uint8)
     # Padding cells never pass (defensive; valid codes never reach them).
     cell_idx = np.arange(m1)[:, None]
     r = np.where(cell_idx < index.cells[None, :], r, 0).astype(np.uint8)
-    for pred in predicates:
+
+    def cell_col(pred: Predicate) -> np.ndarray:
         k = int(index.cells[pred.attr])
         reps = index.centers[:k, pred.attr]
-        ok = pred.eval(reps).astype(np.uint8)
         col = np.zeros(m1, dtype=np.uint8)
-        col[:k] = ok
-        r[:, pred.attr] &= col
+        col[:k] = pred.eval(reps).astype(np.uint8)
+        return col
+
+    for attr, cols in _conjunct_terms(
+            predicates, cell_col, lambda c1, c2: np.bitwise_or(c1, c2)):
+        r[:, attr] &= cols
     return r
+
+
+def _conjunct_terms(predicates, evaluate, disjoin):
+    """Group-aware predicate combination shared by R-lookup and ground truth.
+
+    Yields (attr, term) pairs to AND together, where each term is either one
+    ungrouped predicate's evaluation or the OR over a disjunct group. Raises
+    if a disjunct group spans attributes (R factorizes per attribute).
+    """
+    groups: Dict[int, List[Predicate]] = {}
+    for pred in predicates:
+        if pred.group is None:
+            yield pred.attr, evaluate(pred)
+        else:
+            groups.setdefault(pred.group, []).append(pred)
+    for gid, members in groups.items():
+        attrs = {p.attr for p in members}
+        if len(attrs) > 1:
+            raise ValueError(
+                f"disjunct group {gid} spans attributes {sorted(attrs)}; "
+                "OR groups must reference a single attribute")
+        term = evaluate(members[0])
+        for pred in members[1:]:
+            term = disjoin(term, evaluate(pred))
+        yield members[0].attr, term
 
 
 def filter_mask(r_lookup, codes):
@@ -179,14 +217,13 @@ def filter_mask(r_lookup, codes):
 
 def predicate_selectivity(attrs: np.ndarray, predicates: Sequence[Predicate]) -> float:
     """Exact joint selectivity on raw values (for experiment calibration)."""
-    mask = np.ones(attrs.shape[0], dtype=bool)
-    for p in predicates:
-        mask &= p.eval(attrs[:, p.attr])
-    return float(mask.mean())
+    return float(ground_truth_mask(attrs, predicates).mean())
 
 
 def ground_truth_mask(attrs: np.ndarray, predicates: Sequence[Predicate]) -> np.ndarray:
+    """Raw-value filter semantics: OR within disjunct groups, AND across."""
     mask = np.ones(attrs.shape[0], dtype=bool)
-    for p in predicates:
-        mask &= p.eval(attrs[:, p.attr])
+    for _, term in _conjunct_terms(
+            predicates, lambda p: p.eval(attrs[:, p.attr]), np.logical_or):
+        mask &= term
     return mask

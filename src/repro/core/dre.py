@@ -18,7 +18,7 @@ import dataclasses
 import random
 from typing import Dict, Hashable, Optional, Tuple
 
-__all__ = ["ContainerPool", "ResultCache", "DreStats"]
+__all__ = ["ContainerPool", "ResultCache", "DreStats", "Lease"]
 
 
 @dataclasses.dataclass
@@ -29,6 +29,28 @@ class DreStats:
     s3_gets: int = 0
     bytes_fetched: int = 0
     fetch_seconds: float = 0.0
+
+    def merge(self, other: "DreStats") -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+
+
+@dataclasses.dataclass(frozen=True)
+class Lease:
+    """Outcome of one container acquisition (what the runtime schedules on).
+
+    ``fetch_s`` is the S3 fetch latency *this* invocation pays (0 on a DRE
+    hit) — per-call, unlike the cumulative ``DreStats.fetch_seconds``.
+    ``stats`` is this call's one-invocation :class:`DreStats` delta, so
+    callers aggregate run-level accounting with ``DreStats.merge`` instead
+    of re-deriving the field logic.
+    """
+
+    container_id: int
+    warm: bool
+    dre_hit: bool
+    fetch_s: float
+    stats: DreStats = dataclasses.field(default_factory=DreStats)
 
 
 class ContainerPool:
@@ -54,28 +76,45 @@ class ContainerPool:
         self.fetch_rtt_s = fetch_rtt_s
         self.stats = DreStats()
 
-    def invoke(self, data_key: Hashable, data_bytes: int, use_dre: bool = True
-               ) -> Tuple[bool, bool]:
-        self.stats.invocations += 1
+    def acquire(self, data_key: Hashable, data_bytes: int,
+                use_dre: bool = True) -> Lease:
+        """Lease a container for one invocation *without* releasing it.
+
+        Concurrent invocations of the same function (one wave of the
+        serverless runtime) must each hold a distinct container; call
+        :meth:`release` when the invocation's response has been sent.
+        """
         warm = bool(self._free) and self._rng.random() < self.warm_prob
         if warm:
             cid = self._free.pop()
-            self.stats.warm_starts += 1
         else:
             cid = self._next_container
             self._next_container += 1
         hit = use_dre and self._singletons.get(cid) == data_key
-        if hit:
-            self.stats.dre_hits += 1
-        else:
-            self.stats.s3_gets += 1
-            self.stats.bytes_fetched += data_bytes
-            self.stats.fetch_seconds += (
-                self.fetch_rtt_s + data_bytes / self.fetch_bandwidth_bps
-            )
+        fetch_s = 0.0
+        if not hit:
+            fetch_s = self.fetch_rtt_s + data_bytes / self.fetch_bandwidth_bps
             self._singletons[cid] = data_key
-        self._free.append(cid)
-        return warm, hit
+        delta = DreStats(
+            invocations=1,
+            warm_starts=int(warm),
+            dre_hits=int(hit),
+            s3_gets=int(not hit),
+            bytes_fetched=0 if hit else data_bytes,
+            fetch_seconds=fetch_s,
+        )
+        self.stats.merge(delta)
+        return Lease(container_id=cid, warm=warm, dre_hit=hit,
+                     fetch_s=fetch_s, stats=delta)
+
+    def release(self, lease: Lease) -> None:
+        self._free.append(lease.container_id)
+
+    def invoke(self, data_key: Hashable, data_bytes: int, use_dre: bool = True
+               ) -> Tuple[bool, bool]:
+        lease = self.acquire(data_key, data_bytes, use_dre=use_dre)
+        self.release(lease)
+        return lease.warm, lease.dre_hit
 
 
 class ResultCache:
@@ -90,7 +129,7 @@ class ResultCache:
     def key(self, query_vec, predicates, k: int) -> Hashable:
         pv = tuple(round(float(v), 6) for v in query_vec)
         pp = tuple(
-            (p.attr, p.op, float(p.lo), float(p.hi), tuple(p.values))
+            (p.attr, p.op, float(p.lo), float(p.hi), tuple(p.values), p.group)
             for p in predicates
         )
         return (pv, pp, k)

@@ -18,7 +18,8 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["tree_size", "children_of", "build_tree", "InvocationSim"]
+__all__ = ["tree_size", "children_of", "build_tree", "tree_nodes",
+           "NodeSpec", "InvocationSim"]
 
 
 def tree_size(branching: int, max_level: int) -> int:
@@ -68,6 +69,44 @@ def build_tree(branching: int, max_level: int) -> Dict[int, List[int]]:
         tree[nid] = kids
         frontier.extend((k, lvl + 1) for k in kids)
     return tree
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeSpec:
+    """One tree node with everything the runtime needs to route payloads.
+
+    ``subtree`` counts the QA ids strictly below this node, so the id range
+    a node is responsible for is ``[node_id, node_id + subtree]`` (inclusive;
+    the coordinator covers ``[0, n_qa)``). That range is what makes
+    bi-directional request/response routing storage-free: a parent knows
+    exactly which ids — hence which query slices — return through each child.
+    """
+
+    node_id: int
+    level: int
+    children: Tuple[int, ...]
+    subtree: int
+
+    def id_range(self, n_qa: int) -> Tuple[int, int]:
+        """[lo, hi) of QA ids this node's subtree covers (self included)."""
+        if self.node_id == -1:
+            return 0, n_qa
+        return self.node_id, min(self.node_id + self.subtree + 1, n_qa)
+
+
+def tree_nodes(branching: int, max_level: int) -> Dict[int, NodeSpec]:
+    """Alg. 2 tree with levels + subtree spans (the runtime's routing table)."""
+    nodes: Dict[int, NodeSpec] = {}
+    frontier: List[Tuple[int, int]] = [(-1, 0)]
+    while frontier:
+        nid, lvl = frontier.pop()
+        kids = children_of(nid, lvl, branching, max_level)
+        sub = (tree_size(branching, max_level) if nid == -1
+               else tree_size(branching, max_level - lvl))
+        nodes[nid] = NodeSpec(node_id=nid, level=lvl,
+                              children=tuple(kids), subtree=sub)
+        frontier.extend((k, lvl + 1) for k in kids)
+    return nodes
 
 
 @dataclasses.dataclass

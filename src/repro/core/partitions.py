@@ -130,6 +130,7 @@ def select_partitions(
     threshold: float,
     k: int,
     balance: bool = False,
+    escalations: Optional[list] = None,
 ) -> Tuple[np.ndarray, List[Dict[int, np.ndarray]]]:
     """Algorithm 1 — Filtered Partition Ranking and Selection.
 
@@ -142,6 +143,10 @@ def select_partitions(
       k: top-k target.
       balance: optional batch load-balancing step (assign extra queries to
         under-visited partitions, narrowest-miss first).
+      escalations: optional one-element list; incremented by the number of
+        (query, partition) visits *past* the Eq. 1 threshold cut — the §2.5
+        filter-count guarantee at work (counted here, where the cut decision
+        is made, so callers can't drift from it).
 
     Returns:
       visit: (Q, P) bool — partitions each query must be issued to.
@@ -165,13 +170,15 @@ def select_partitions(
     visit = np.zeros((qn, p), dtype=bool)
     cands: List[Dict[int, np.ndarray]] = []
     near_miss: List[Tuple[float, int, int]] = []  # (margin, q, partition)
+    escalated = 0
     for qi in range(qn):
         cand_total = 0
         per_part: Dict[int, np.ndarray] = {}
         ranked = np.argsort(dists[qi])
         dmin = dists[qi, ranked[0]]
         for rank, pid in enumerate(ranked):
-            if dists[qi, pid] > threshold * max(dmin, 1e-12) and cand_total >= k:
+            past_cut = dists[qi, pid] > threshold * max(dmin, 1e-12)
+            if past_cut and cand_total >= k:
                 near_miss.append((dists[qi, pid] / max(dmin, 1e-12), qi, pid))
                 break
             rows = np.where(filter_masks[qi] & (assign == pid))[0]
@@ -179,7 +186,11 @@ def select_partitions(
                 visit[qi, pid] = True
                 per_part[pid] = local_pos[rows]
                 cand_total += rows.size
+                if past_cut:
+                    escalated += 1
         cands.append(per_part)
+    if escalations is not None:
+        escalations[0] += escalated
     if balance:
         visits_per_part = visit.sum(axis=0)
         target = max(1, int(np.ceil(visit.sum() / p)))

@@ -119,9 +119,9 @@ def ground_truth(
     ds: VectorDataset, predicates: Sequence[Predicate], k: int = 10
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Exact filtered top-k by brute force. Returns (ids (Q,k), dists (Q,k))."""
-    mask = np.ones(ds.n, dtype=bool)
-    for p in predicates:
-        mask &= p.eval(ds.attributes[:, p.attr])
+    from repro.core.attributes import ground_truth_mask
+
+    mask = ground_truth_mask(ds.attributes, predicates)
     idx = np.where(mask)[0]
     sub = ds.vectors[idx].astype(np.float64)
     out_ids = np.full((ds.queries.shape[0], k), -1, dtype=np.int64)

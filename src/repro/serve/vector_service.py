@@ -1,13 +1,16 @@
 """Vector-search serving facade: QA-style request routing over SquashIndex.
 
-The simulated serverless runtime (examples/, benchmarks/) talks to the index
-through this service rather than calling ``SquashIndex.search`` directly, so
-the data-plane backend becomes a deployment decision:
+Callers talk to the index through this service rather than calling
+``SquashIndex.search`` directly, so the data-plane/deployment becomes a
+routing decision:
 
-* ``backend="numpy"`` — per-query reference loop (debug / tiny batches).
-* ``backend="jax"``   — batched jitted plane (the production hot path).
-* ``backend="auto"``  — route by batch size: single-query lookups take the
-  loop (no trace/dispatch overhead), real batches take the batched plane.
+* ``backend="numpy"``      — per-query reference loop (debug / tiny batches).
+* ``backend="jax"``        — batched jitted plane (the production hot path).
+* ``backend="serverless"`` — the full event-driven Coordinator → QA → QP
+  runtime (``repro.serverless``): same ids as the jax plane, plus per-node
+  latency / payload / DRE / cost traces (kept on ``last_trace``).
+* ``backend="auto"``       — route by batch size: single-query lookups take
+  the loop (no trace/dispatch overhead), real batches the batched plane.
 
 The service also plays the QueryAllocator's accounting role: it accumulates
 :class:`~repro.core.pipeline.SearchStats` across requests and tracks wall
@@ -30,11 +33,15 @@ __all__ = ["ServiceConfig", "VectorSearchService"]
 
 _AUTO_BATCH_THRESHOLD = 4  # ≥ this many queries → batched jax plane
 
+# Backends a request may name explicitly ("auto" resolves before dispatch).
+_CALL_BACKENDS = ("numpy", "jax", "serverless")
+
 
 @dataclasses.dataclass
 class ServiceConfig:
-    backend: str = "auto"              # numpy | jax | auto
+    backend: str = "auto"              # numpy | jax | serverless | auto
     default_k: int = 10
+    serverless: Optional[object] = None  # repro.serverless.RuntimeConfig
 
 
 class VectorSearchService:
@@ -43,17 +50,28 @@ class VectorSearchService:
     def __init__(self, index: SquashIndex, config: Optional[ServiceConfig] = None):
         self.index = index
         self.config = config or ServiceConfig()
-        if self.config.backend not in ("numpy", "jax", "auto"):
+        if self.config.backend not in _CALL_BACKENDS + ("auto",):
             raise ValueError(f"unknown backend {self.config.backend!r}")
         self.stats = SearchStats()
         self.requests = 0
-        self.wall_s: Dict[str, float] = {"numpy": 0.0, "jax": 0.0}
-        self.queries_served: Dict[str, int] = {"numpy": 0, "jax": 0}
+        self.wall_s: Dict[str, float] = {b: 0.0 for b in _CALL_BACKENDS}
+        self.queries_served: Dict[str, int] = {b: 0 for b in _CALL_BACKENDS}
+        self._runtime = None
+        self.last_trace = None         # RunTrace of the last serverless call
 
     def resolve_backend(self, num_queries: int) -> str:
         if self.config.backend != "auto":
             return self.config.backend
         return "jax" if num_queries >= _AUTO_BATCH_THRESHOLD else "numpy"
+
+    def runtime(self):
+        """The lazily-built serverless runtime bound to this index."""
+        if self._runtime is None:
+            from repro.serverless import RuntimeConfig, ServerlessRuntime
+
+            cfg = self.config.serverless or RuntimeConfig()
+            self._runtime = ServerlessRuntime(self.index, cfg)
+        return self._runtime
 
     def warmup(self, num_queries: int, k: Optional[int] = None) -> None:
         """Pre-trace the jax plane for a batch shape (DRE-style warm start)."""
@@ -68,15 +86,28 @@ class VectorSearchService:
         k: Optional[int] = None,
         backend: Optional[str] = None,
     ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
-        """Serve one request batch; returns (ids, dists, per-request stats)."""
+        """Serve one request batch; returns (ids, dists, per-request stats).
+
+        ``backend`` must be one of ``_CALL_BACKENDS`` or ``"auto"``/None; an
+        unknown string fails here, before any index state is touched.
+        """
+        if backend not in (None, "auto") + _CALL_BACKENDS:
+            raise ValueError(
+                f"unknown backend {backend!r}; expected one of "
+                f"{('auto',) + _CALL_BACKENDS}")
         queries = np.atleast_2d(np.asarray(queries, dtype=np.float64))
         k = k or self.config.default_k
         chosen = (self.resolve_backend(queries.shape[0])
                   if backend in (None, "auto") else backend)
         t0 = time.perf_counter()
-        ids, dists, stats = self.index.search(
-            queries, list(predicates), k=k, backend=chosen
-        )
+        if chosen == "serverless":
+            result = self.runtime().search(queries, list(predicates), k=k)
+            ids, dists, stats = result.ids, result.dists, result.stats
+            self.last_trace = result.trace
+        else:
+            ids, dists, stats = self.index.search(
+                queries, list(predicates), k=k, backend=chosen
+            )
         dt = time.perf_counter() - t0
         self.requests += 1
         self.stats.merge(stats)

@@ -1,0 +1,31 @@
+"""Serverless runtime subsystem — the paper's system layer (§3), executable.
+
+Event-driven Coordinator → QueryAllocator → QueryProcessor execution of the
+real SQUASH data plane:
+
+* ``events``  — the discrete-event loop (virtual clock) actors run on.
+* ``payload`` — request/response codec + Lambda-style byte budgets with an
+  explicit overflow policy (error vs chunked re-invocation).
+* ``nodes``   — the three actor roles: Coordinator fan-out/merge, QA
+  attribute filtering + Alg. 1 selection with the §2.5 filter-count
+  guarantee, QP Stages 3–5 on its partition shard (``core.dataplane``).
+* ``traces``  — per-node latency/payload/DRE records and the §3.5 cost
+  assembly (``core.cost_model``).
+* ``runtime`` — the façade tying it together: ``ServerlessRuntime.search``
+  returns ids bitwise-identical to ``SquashIndex.search(backend="jax")``
+  plus a full run trace.
+"""
+
+from repro.serverless.events import EventLoop
+from repro.serverless.payload import (MAX_SYNC_PAYLOAD_BYTES,
+                                      PayloadOverflowError, decode_message,
+                                      encode_message)
+from repro.serverless.runtime import (RuntimeConfig, SearchResult,
+                                      ServerlessRuntime)
+from repro.serverless.traces import NodeTrace, RunTrace
+
+__all__ = [
+    "EventLoop", "MAX_SYNC_PAYLOAD_BYTES", "PayloadOverflowError",
+    "decode_message", "encode_message", "RuntimeConfig", "SearchResult",
+    "ServerlessRuntime", "NodeTrace", "RunTrace",
+]

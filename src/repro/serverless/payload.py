@@ -1,0 +1,157 @@
+"""Request/response payload codec + byte budgets (paper §3.3 payload flow).
+
+Every hop in the invocation tree exchanges *encoded* payloads: a JSON header
+(scalars, predicate lists, array manifest) followed by raw C-contiguous
+array buffers. Encoding is what gives the runtime honest byte accounting —
+the 6 MB synchronous-invocation cap AWS Lambda enforces is applied to the
+encoded size, with an explicit overflow policy:
+
+* ``"error"`` — raise :class:`PayloadOverflowError` (the deploy-time guard).
+* ``"chunk"`` — split the request on its query axis into multiple
+  invocations of the same function (each chunk pays its own invocation
+  overhead and payload transfer; responses merge by global query index).
+  An oversized *response* paginates instead: :func:`response_chunks` tells
+  the runtime how many pages to bill as warm round-trips.
+
+A payload that cannot be split further (a single query) always raises.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.attributes import Predicate
+
+__all__ = [
+    "MAX_SYNC_PAYLOAD_BYTES", "OVERFLOW_POLICIES", "PayloadOverflowError",
+    "encode_message", "decode_message", "chunk_request", "response_chunks",
+    "predicates_to_json", "predicates_from_json",
+]
+
+# AWS Lambda request/response limit for synchronous invocations (6 MB).
+MAX_SYNC_PAYLOAD_BYTES = 6 * 1024 * 1024
+
+OVERFLOW_POLICIES = ("error", "chunk")
+
+_MAGIC = b"SQP1"
+
+
+class PayloadOverflowError(RuntimeError):
+    """A payload exceeded the per-invocation byte budget and could not be
+    (or was configured not to be) chunked."""
+
+
+def encode_message(msg: Dict) -> bytes:
+    """Serialize a flat dict of numpy arrays + JSON-able scalars."""
+    arrays: List[Tuple[str, np.ndarray]] = []
+    meta: Dict = {}
+    for key, val in msg.items():
+        if isinstance(val, np.ndarray):
+            arrays.append((key, np.ascontiguousarray(val)))
+        elif isinstance(val, (np.integer, np.floating)):
+            meta[key] = val.item()
+        else:
+            meta[key] = val
+    header = {
+        "meta": meta,
+        "arrays": [
+            {"name": k, "dtype": a.dtype.str, "shape": list(a.shape)}
+            for k, a in arrays
+        ],
+    }
+    hb = json.dumps(header, separators=(",", ":")).encode("utf-8")
+    out = [_MAGIC, struct.pack("<I", len(hb)), hb]
+    out.extend(a.tobytes() for _, a in arrays)
+    return b"".join(out)
+
+
+def decode_message(buf: bytes) -> Dict:
+    """Inverse of :func:`encode_message` (arrays come back bit-identical)."""
+    if buf[:4] != _MAGIC:
+        raise ValueError("not a SQUASH payload (bad magic)")
+    (hlen,) = struct.unpack("<I", buf[4:8])
+    header = json.loads(buf[8 : 8 + hlen].decode("utf-8"))
+    msg: Dict = dict(header["meta"])
+    off = 8 + hlen
+    for spec in header["arrays"]:
+        dt = np.dtype(spec["dtype"])
+        shape = tuple(spec["shape"])
+        nbytes = dt.itemsize * int(np.prod(shape, dtype=np.int64))
+        msg[spec["name"]] = np.frombuffer(
+            buf[off : off + nbytes], dtype=dt
+        ).reshape(shape).copy()
+        off += nbytes
+    return msg
+
+
+def chunk_request(
+    req: Dict,
+    *,
+    max_bytes: int,
+    policy: str,
+    split: Callable[[Dict, int, int], Dict],
+    num_items: Callable[[Dict], int],
+) -> List[Tuple[Dict, bytes]]:
+    """Encode ``req``; on overflow apply the policy.
+
+    ``split(req, lo, hi)`` must return the sub-request covering item
+    positions [lo, hi) of the splittable axis (queries); ``num_items`` its
+    length. Returns [(request, encoded_bytes), ...] — one entry per
+    invocation the caller must issue.
+    """
+    if policy not in OVERFLOW_POLICIES:
+        raise ValueError(f"unknown overflow policy {policy!r}; "
+                         f"expected {OVERFLOW_POLICIES}")
+    out: List[Tuple[Dict, bytes]] = []
+
+    def rec(r: Dict) -> None:
+        buf = encode_message(r)
+        if len(buf) <= max_bytes:
+            out.append((r, buf))
+            return
+        n = num_items(r)
+        if policy == "error" or n <= 1:
+            raise PayloadOverflowError(
+                f"request payload of {len(buf)} B exceeds the "
+                f"{max_bytes} B budget"
+                + ("" if policy == "chunk"
+                   else " (overflow policy 'error')")
+                + (" and cannot be split below one query" if n <= 1 else "")
+            )
+        rec(split(r, 0, n // 2))
+        rec(split(r, n // 2, n))
+
+    rec(req)
+    return out
+
+
+def response_chunks(nbytes: int, *, max_bytes: int, policy: str) -> int:
+    """Number of response payloads needed; raises under the error policy."""
+    if nbytes <= max_bytes:
+        return 1
+    if policy == "error":
+        raise PayloadOverflowError(
+            f"response payload of {nbytes} B exceeds the {max_bytes} B budget "
+            "(overflow policy 'error')")
+    return -(-nbytes // max_bytes)
+
+
+def predicates_to_json(predicates: Sequence[Predicate]) -> List[Dict]:
+    return [
+        {"attr": int(p.attr), "op": p.op, "lo": float(p.lo),
+         "hi": float(p.hi), "values": [float(v) for v in p.values],
+         "group": p.group}
+        for p in predicates
+    ]
+
+
+def predicates_from_json(items: Sequence[Dict]) -> List[Predicate]:
+    return [
+        Predicate(attr=int(d["attr"]), op=d["op"], lo=d["lo"], hi=d["hi"],
+                  values=tuple(d["values"]), group=d["group"])
+        for d in items
+    ]

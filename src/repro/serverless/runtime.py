@@ -1,0 +1,543 @@
+"""ServerlessRuntime — event-driven execution of the SQUASH system layer.
+
+One ``search()`` call replays the paper's §3.3 choreography on a virtual
+clock: the client invokes the Coordinator; the Coordinator fans out over the
+Algorithm 2 ID-jump tree (or the sequential strawman); every QueryAllocator
+runs Stage 1 + Algorithm 1 on its own query slice and invokes one
+QueryProcessor per visited partition; QPs execute Stages 3–5 of the real
+batched data plane on their partition shard; results merge back up the tree
+via the MPI-style top-k combine. Along the way the runtime models what the
+old simulators only sketched:
+
+* payload byte budgets — every hop is encoded through the codec and checked
+  against the Lambda-style 6 MB cap with an explicit overflow policy;
+* DRE — warm-container reuse through ``core.dre.ContainerPool`` leases, one
+  pool per function (``squash-allocator``, ``squash-processor-<pid>``);
+* per-node latency traces and the §3.5 dollar breakdown via
+  ``core.cost_model``.
+
+Parity contract: for the same index/queries/predicates/k, the returned ids
+are **bitwise identical** to ``SquashIndex.search(backend="jax")`` and the
+aggregate :class:`~repro.core.pipeline.SearchStats` match exactly — the QPs
+run the same jitted plane over partition slices of the same stacked payload,
+and the ascending-partition stable merge reproduces the reference
+tie-breaking.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import dataplane, invocation
+from repro.core.attributes import Predicate
+from repro.core.cost_model import PricingConstants
+from repro.core.dre import ContainerPool, DreStats, Lease
+from repro.core.pipeline import SearchStats, SquashIndex
+from repro.serverless import nodes as nd
+from repro.serverless import payload as pl
+from repro.serverless.events import EventLoop
+from repro.serverless.traces import NodeTrace, RunTrace, assemble_run_trace
+
+__all__ = ["RuntimeConfig", "SearchResult", "ServerlessRuntime"]
+
+
+@dataclasses.dataclass
+class RuntimeConfig:
+    """Topology, latency model, payload budget and pricing of one deployment."""
+
+    branching: int = 4                 # F — Alg. 2 fan-out
+    max_level: int = 2                 # l_max — tree depth below the CO
+    sequential: bool = False           # CO-invokes-everything strawman (Fig. 7)
+
+    # Payload budget (§3.3): Lambda's synchronous request/response cap.
+    max_payload_bytes: int = pl.MAX_SYNC_PAYLOAD_BYTES
+    overflow: str = "chunk"            # "chunk" | "error"
+
+    # DRE / container model (§3.2).
+    use_dre: bool = True
+    warm_prob: float = 1.0
+    fetch_bandwidth_bps: float = 85e6
+    fetch_rtt_s: float = 0.02
+
+    # Invocation latency model (Alg. 2 / Fig. 7).
+    invoke_latency_warm_s: float = 0.015
+    invoke_latency_cold_s: float = 0.400
+    invoke_stagger_s: float = 0.002    # thread-spawn serialization per child
+    payload_bandwidth_bps: float = 300e6
+
+    # Node busy times: None → measured host wall time of the real handler;
+    # a float pins the virtual compute time (benchmark configurations).
+    co_compute_s: Optional[float] = None
+    qa_compute_s: Optional[float] = None
+    qp_compute_s: Optional[float] = None
+
+    # §3.5 cost model inputs.
+    mem_co_mb: int = 512
+    mem_qa_mb: int = 1770
+    mem_qp_mb: int = 1770
+    prices: PricingConstants = dataclasses.field(default_factory=PricingConstants)
+
+    dataset_tag: str = "dataset"       # DRE singleton key prefix
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.overflow not in pl.OVERFLOW_POLICIES:
+            raise ValueError(f"unknown overflow policy {self.overflow!r}; "
+                             f"expected {pl.OVERFLOW_POLICIES}")
+        if self.branching < 1 or self.max_level < 1:
+            raise ValueError("branching and max_level must be >= 1")
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """Final merged top-k plus the run's full accounting."""
+
+    ids: np.ndarray        # (Q, k) int64, -1 padding
+    dists: np.ndarray      # (Q, k) float64, +inf padding
+    stats: SearchStats
+    trace: RunTrace
+
+
+class _Gather:
+    """Scatter-accumulator for (possibly chunked) responses, by query index."""
+
+    def __init__(self, qidx: np.ndarray, k: int):
+        self.pos = {int(q): i for i, q in enumerate(qidx)}
+        self.ids = np.full((qidx.shape[0], k), -1, dtype=np.int64)
+        self.dists = np.full((qidx.shape[0], k), np.inf, dtype=np.float64)
+
+    def rows_of(self, qidx: np.ndarray) -> np.ndarray:
+        return np.fromiter((self.pos[int(q)] for q in qidx),
+                           dtype=np.int64, count=qidx.shape[0])
+
+    def scatter(self, resp: Dict) -> None:
+        if resp["qidx"].shape[0] == 0:
+            return
+        rows = self.rows_of(resp["qidx"])
+        self.ids[rows] = resp["ids"]
+        self.dists[rows] = resp["dists"]
+
+
+class ServerlessRuntime:
+    """The serverless system façade bound to one resident :class:`SquashIndex`."""
+
+    def __init__(self, index: SquashIndex, config: Optional[RuntimeConfig] = None):
+        import jax
+
+        self.index = index
+        self.cfg = config or RuntimeConfig()
+        self.n_qp = len(index.parts)
+        self.n_qa = invocation.tree_size(self.cfg.branching, self.cfg.max_level)
+        self.topology = self._build_topology()
+        pool_kw = dict(warm_prob=self.cfg.warm_prob,
+                       fetch_bandwidth_bps=self.cfg.fetch_bandwidth_bps,
+                       fetch_rtt_s=self.cfg.fetch_rtt_s)
+        # One pool per Lambda *function*: the shared allocator function and
+        # one processor function per partition (squash-processor-<pid>), so a
+        # warm QP container always matches its partition's singleton.
+        self.qa_pool = ContainerPool(seed=self.cfg.seed + 1, **pool_kw)
+        self.qp_pools = {
+            pid: ContainerPool(seed=self.cfg.seed + 2 + pid, **pool_kw)
+            for pid in range(self.n_qp)
+        }
+        self.allocator = nd.QueryAllocator(index)
+        self._dtype = np.float64 if jax.config.jax_enable_x64 else np.float32
+        self._stacked = None
+        self._processors: Dict[int, nd.QueryProcessor] = {}
+        self._planes: Dict = {}
+        self._trace_counter = [0]
+
+    # ------------------------------------------------------------- resources
+
+    def _build_topology(self) -> Dict[int, invocation.NodeSpec]:
+        if self.cfg.sequential:
+            nodes = {-1: invocation.NodeSpec(node_id=-1, level=0,
+                                             children=tuple(range(self.n_qa)),
+                                             subtree=self.n_qa)}
+            for x in range(self.n_qa):
+                nodes[x] = invocation.NodeSpec(node_id=x, level=1,
+                                               children=(), subtree=0)
+            return nodes
+        return invocation.tree_nodes(self.cfg.branching, self.cfg.max_level)
+
+    @property
+    def stacked(self) -> dataplane.StackedIndex:
+        if self._stacked is None:
+            self._stacked = dataplane.stack_index(self.index, dtype=self._dtype)
+        return self._stacked
+
+    def processor(self, pid: int) -> nd.QueryProcessor:
+        if pid not in self._processors:
+            import jax
+
+            # The QP's DRE singleton: this partition's slice of the stacked
+            # payload (same arrays the jax backend searches, so bit-parity).
+            sl = jax.tree_util.tree_map(lambda a: a[pid:pid + 1], self.stacked)
+            self._processors[pid] = nd.QueryProcessor(
+                pid, sl, self._plane_for, self.index.config, self._dtype)
+        return self._processors[pid]
+
+    def _plane_for(self, k: int):
+        cfg = self.index.config
+        keep_s, take_s = dataplane.static_counts(self.stacked.n_max, cfg, k)
+        key = (k, keep_s, take_s, cfg.enable_refine)
+        plane = self._planes.get(key)
+        if plane is None:
+            plane = dataplane.make_plane(
+                k=k, keep_s=keep_s, take_s=take_s, refine=cfg.enable_refine,
+                trace_counter=self._trace_counter)
+            self._planes[key] = plane
+        return plane
+
+    def qa_data_bytes(self) -> int:
+        """QA singleton: attribute Q-index + centroids + P-V map."""
+        idx = self.index
+        return int(idx.attr_index.codes.nbytes
+                   + idx.partitioning.centroids.nbytes
+                   + idx.partitioning.assign.nbytes)
+
+    def qp_data_bytes(self, pid: int) -> int:
+        """QP singleton: the partition's OSQ indexes (the S3 object)."""
+        part = self.index.parts[pid]
+        return int(part.packed.nbytes + part.low.packed.nbytes
+                   + part.codes.nbytes + part.quant.boundaries.nbytes)
+
+    # ----------------------------------------------------------------- search
+
+    def search(
+        self,
+        queries: np.ndarray,
+        predicates: Sequence[Predicate] = (),
+        k: int = 10,
+    ) -> SearchResult:
+        """Run one query batch through the full CO → QA → QP choreography."""
+        queries = np.atleast_2d(np.asarray(queries, dtype=np.float64))
+        qn = queries.shape[0]
+        if qn == 0:
+            empty = assemble_run_trace(
+                [], makespan_s=0.0, escalations=0, dre=DreStats(),
+                efs_reads=0, efs_read_bytes=0, stats=SearchStats(),
+                mem_qa_mb=self.cfg.mem_qa_mb, mem_qp_mb=self.cfg.mem_qp_mb,
+                mem_co_mb=self.cfg.mem_co_mb, prices=self.cfg.prices)
+            return SearchResult(ids=np.full((0, k), -1, np.int64),
+                                dists=np.full((0, k), np.inf),
+                                stats=SearchStats(), trace=empty)
+        return _Execution(self, qn, k).run(queries, list(predicates))
+
+
+class _Execution:
+    """One search run: the event choreography plus its accumulators."""
+
+    def __init__(self, rt: ServerlessRuntime, qn: int, k: int):
+        self.rt = rt
+        self.cfg = rt.cfg
+        self.loop = EventLoop()
+        self.qn = qn
+        self.k = k
+        self.qpq = -(-qn // rt.n_qa)          # queries per QA (ceil)
+        self.nodes: List[NodeTrace] = []
+        self.dre = DreStats()
+        self.stats = SearchStats(queries=qn)
+        self.escalations = 0
+        self.efs_reads = 0
+        self.efs_read_bytes = 0
+        self.out_ids = np.full((qn, k), -1, dtype=np.int64)
+        self.out_dists = np.full((qn, k), np.inf, dtype=np.float64)
+
+    # ------------------------------------------------------------- utilities
+
+    def _tx(self, nbytes: int) -> float:
+        return nbytes / self.cfg.payload_bandwidth_bps
+
+    def _qrange(self, idlo: int, idhi: int):
+        return idlo * self.qpq, min(idhi * self.qpq, self.qn)
+
+    def _own_range(self, spec: invocation.NodeSpec):
+        if spec.node_id == -1:
+            return 0, 0
+        return self._qrange(spec.node_id, spec.node_id + 1)
+
+    def _acquire(self, pool: ContainerPool, key, nbytes: int) -> Lease:
+        lease = pool.acquire(key, nbytes, use_dre=self.cfg.use_dre)
+        self.dre.merge(lease.stats)
+        return lease
+
+    def _invoke_overhead(self, warm: bool) -> float:
+        return (self.cfg.invoke_latency_warm_s if warm
+                else self.cfg.invoke_latency_cold_s)
+
+    # ------------------------------------------------------------------ run
+
+    def run(self, queries: np.ndarray, predicates: List[Predicate]
+            ) -> SearchResult:
+        root_req = {
+            "qidx": np.arange(self.qn, dtype=np.int32),
+            "queries": queries,
+            "preds": pl.predicates_to_json(predicates),
+            "k": int(self.k),
+        }
+
+        def root_respond(resp: Dict) -> None:
+            rows = resp["qidx"].astype(np.int64)
+            self.out_ids[rows] = resp["ids"]
+            self.out_dists[rows] = resp["dists"]
+
+        self._invoke_allocator(self.rt.topology[-1], root_req,
+                               t_issue=0.0, parent="client",
+                               respond=root_respond)
+        makespan = self.loop.run()
+        trace = assemble_run_trace(
+            self.nodes, makespan_s=makespan, escalations=self.escalations,
+            dre=self.dre, efs_reads=self.efs_reads,
+            efs_read_bytes=self.efs_read_bytes, stats=self.stats,
+            mem_qa_mb=self.cfg.mem_qa_mb, mem_qp_mb=self.cfg.mem_qp_mb,
+            mem_co_mb=self.cfg.mem_co_mb, prices=self.cfg.prices)
+        return SearchResult(ids=self.out_ids, dists=self.out_dists,
+                            stats=self.stats, trace=trace)
+
+    # ------------------------------------------------------- allocator nodes
+
+    def _invoke_allocator(
+        self,
+        spec: invocation.NodeSpec,
+        req: Dict,
+        t_issue: float,
+        parent: str,
+        respond: Callable[[Dict], None],
+    ) -> float:
+        """Issue one logical CO/QA invocation (possibly chunked).
+
+        Returns the launch occupancy (Σ stagger + invoke overhead over the
+        chunks) the issuing thread pays — the sequential strawman serializes
+        on exactly this.
+        """
+        kind = "co" if spec.node_id == -1 else "qa"
+        name = "co" if kind == "co" else f"qa:{spec.node_id}"
+        chunks = pl.chunk_request(
+            req, max_bytes=self.cfg.max_payload_bytes,
+            policy=self.cfg.overflow, split=nd.split_search_request,
+            num_items=lambda r: r["qidx"].shape[0])
+        gather = _Gather(req["qidx"], self.k)
+        state = {"left": len(chunks)}
+
+        def chunk_done(resp: Dict) -> None:
+            gather.scatter(resp)
+            state["left"] -= 1
+            if state["left"] == 0:
+                respond({"qidx": req["qidx"], "ids": gather.ids,
+                         "dists": gather.dists})
+
+        launch_s = 0.0
+        for ci, (creq, buf) in enumerate(chunks):
+            if kind == "co":
+                lease = None
+                warm, hit, fetch_s = True, False, 0.0
+            else:
+                lease = self._acquire(
+                    self.rt.qa_pool,
+                    (self.cfg.dataset_tag, "qa-index"),
+                    self.rt.qa_data_bytes())
+                warm, hit, fetch_s = lease.warm, lease.dre_hit, lease.fetch_s
+            inv = self._invoke_overhead(warm)
+            t_i = t_issue + launch_s
+            launch_s += self.cfg.invoke_stagger_s + inv
+            t_start = t_i + inv + self._tx(len(buf))
+            # The handler decodes the wire bytes — the codec is on the real
+            # path of every hop, not just in the byte accounting.
+            self.loop.at(t_start, lambda buf=buf, lease=lease,
+                         warm=warm, hit=hit, fetch_s=fetch_s, inv=inv,
+                         ci=ci, t_i=t_i, t_start=t_start:
+                         self._allocator_handler(
+                             spec, kind, name, parent, ci,
+                             pl.decode_message(buf), len(buf),
+                             lease, warm, hit, fetch_s, inv, t_i, t_start,
+                             chunk_done))
+        return launch_s
+
+    def _allocator_handler(
+        self, spec, kind, name, parent, ci, creq, req_bytes, lease,
+        warm, hit, fetch_s, inv, t_issue, t_start, respond_chunk,
+    ) -> None:
+        cfg = self.cfg
+        t_avail = t_start + fetch_s
+        t0 = time.perf_counter()
+        predicates = pl.predicates_from_json(creq["preds"])
+        k = int(creq["k"])
+        qidx, queries = creq["qidx"], creq["queries"]
+        olo, ohi = self._own_range(spec)
+        own_mask = (qidx >= olo) & (qidx < ohi)
+        own_qidx, own_q = qidx[own_mask], queries[own_mask]
+        plan = self.rt.allocator.plan(own_qidx, own_q, predicates, k)
+        measured = time.perf_counter() - t0
+        fixed = cfg.co_compute_s if kind == "co" else cfg.qa_compute_s
+        compute_s = measured if fixed is None else fixed
+        t_ready = t_avail + compute_s
+
+        self.stats.filter_pass += plan.filter_pass
+        self.stats.partitions_visited += plan.partitions_visited
+        self.escalations += plan.escalations
+
+        gather = _Gather(qidx, k)
+        m_own = own_qidx.shape[0]
+        own_streams: Dict[int, tuple] = {}
+        own_gather = _Gather(own_qidx, k) if m_own else None
+        pending = {"n": 0}
+
+        def finalize() -> None:
+            if m_own:
+                streams = [own_streams[pid] for pid in sorted(own_streams)]
+                ids, dists = nd.merge_partition_topk(m_own, k, streams)
+                gather.scatter({"qidx": own_qidx, "ids": ids, "dists": dists})
+            resp = {"qidx": qidx, "ids": gather.ids, "dists": gather.dists}
+            rbuf = pl.encode_message(resp)
+            # Responses are budgeted too: under the chunk policy an
+            # oversized response paginates — each extra page is a warm
+            # round-trip back to this (still-leased) container.
+            n_pages = pl.response_chunks(
+                len(rbuf), max_bytes=cfg.max_payload_bytes,
+                policy=cfg.overflow)
+            t_end = max(self.loop.now, t_ready)
+            t_end += (n_pages - 1) * cfg.invoke_latency_warm_s
+            self.nodes.append(NodeTrace(
+                node=name, kind=kind, parent=parent, chunk=ci,
+                t_issue=t_issue, t_start=t_start, t_end=t_end,
+                invoke_s=inv, fetch_s=fetch_s, compute_s=compute_s,
+                request_bytes=req_bytes, response_bytes=len(rbuf),
+                warm=warm, dre_hit=hit, queries=int(qidx.shape[0]),
+                own_queries=m_own, response_chunks=n_pages))
+            if lease is not None:
+                self.loop.at(t_end, lambda: self.rt.qa_pool.release(lease))
+            self.loop.at(t_end + self._tx(len(rbuf)),
+                         lambda: respond_chunk(resp))
+
+        def done() -> None:
+            pending["n"] -= 1
+            if pending["n"] == 0:
+                finalize()
+
+        # Children launch first (keep the tree expanding), then the node's
+        # own QP fan-out once Alg. 1 has produced the request payloads.
+        # The primary chunk (ci == 0) launches every child — the whole-fleet
+        # tree launch is the Fig. 7 artifact — but overflow chunks forward
+        # only to subtrees that actually hold some of their queries.
+        seq_t = t_avail
+        for i, ch_id in enumerate(spec.children):
+            ch = self.rt.topology[ch_id]
+            clo, chi = self._qrange(*ch.id_range(self.rt.n_qa))
+            mask = (qidx >= clo) & (qidx < chi)
+            if ci > 0 and not mask.any():
+                continue
+            subreq = {"qidx": qidx[mask], "queries": queries[mask],
+                      "preds": creq["preds"], "k": k}
+            pending["n"] += 1
+
+            def child_done(resp: Dict) -> None:
+                gather.scatter(resp)
+                done()
+
+            if cfg.sequential and kind == "co":
+                seq_t += self._invoke_allocator(ch, subreq, seq_t, name,
+                                                child_done)
+            else:
+                self._invoke_allocator(
+                    ch, subreq, t_avail + i * cfg.invoke_stagger_s, name,
+                    child_done)
+
+        for j, pid in enumerate(sorted(plan.qp_requests)):
+            qreq = plan.qp_requests[pid]
+            pending["n"] += 1
+
+            def qp_done(resp: Dict, pid: int = pid,
+                        qreq: Dict = qreq) -> None:
+                rows = own_gather.rows_of(resp["qidx"])
+                own_streams[pid] = (rows, resp["ids"], resp["dists"])
+                done()
+
+            self._invoke_processor(pid, qreq,
+                                   t_ready + j * cfg.invoke_stagger_s,
+                                   name, qp_done)
+
+        if pending["n"] == 0:
+            self.loop.at(t_ready, finalize)
+
+    # ------------------------------------------------------- processor nodes
+
+    def _invoke_processor(
+        self,
+        pid: int,
+        req: Dict,
+        t_issue: float,
+        parent: str,
+        respond: Callable[[Dict], None],
+    ) -> None:
+        cfg = self.cfg
+        chunks = pl.chunk_request(
+            req, max_bytes=cfg.max_payload_bytes, policy=cfg.overflow,
+            split=nd.split_processor_request,
+            num_items=lambda r: r["qidx"].shape[0])
+        gather = _Gather(req["qidx"], self.k)
+        state = {"left": len(chunks)}
+
+        def chunk_done(resp: Dict) -> None:
+            gather.scatter(resp)
+            state["left"] -= 1
+            if state["left"] == 0:
+                respond({"qidx": req["qidx"], "ids": gather.ids,
+                         "dists": gather.dists})
+
+        for ci, (creq, buf) in enumerate(chunks):
+            lease = self._acquire(
+                self.rt.qp_pools[pid],
+                f"{cfg.dataset_tag}/part{pid}",
+                self.rt.qp_data_bytes(pid))
+            inv = self._invoke_overhead(lease.warm)
+            t_i = t_issue + ci * cfg.invoke_stagger_s
+            t_start = t_i + inv + self._tx(len(buf))
+            self.loop.at(t_start, lambda buf=buf, lease=lease,
+                         inv=inv, ci=ci, t_i=t_i, t_start=t_start:
+                         self._processor_handler(
+                             pid, parent, ci, pl.decode_message(buf),
+                             len(buf), lease, inv, t_i, t_start, chunk_done))
+
+    def _processor_handler(
+        self, pid, parent, ci, creq, req_bytes, lease, inv, t_issue,
+        t_start, respond_chunk,
+    ) -> None:
+        cfg = self.cfg
+        t_avail = t_start + lease.fetch_s
+        t0 = time.perf_counter()
+        resp, counters = self.rt.processor(pid).handle(creq)
+        measured = time.perf_counter() - t0
+        compute_s = measured if cfg.qp_compute_s is None else cfg.qp_compute_s
+        t_end = t_avail + compute_s
+
+        self.stats.hamming_in += counters["hamming_in"]
+        self.stats.hamming_kept += counters["hamming_kept"]
+        self.stats.adc_evals += counters["adc_evals"]
+        self.stats.refined += counters["refined"]
+        # Stage 5 reads full-precision rows from shared storage ('EFS').
+        self.efs_reads += counters["refined"]
+        self.efs_read_bytes += (counters["refined"] * self.rt.index.dim
+                                * np.dtype(np.float32).itemsize)
+
+        rbuf = pl.encode_message(resp)
+        n_pages = pl.response_chunks(len(rbuf),
+                                     max_bytes=cfg.max_payload_bytes,
+                                     policy=cfg.overflow)
+        t_end += (n_pages - 1) * cfg.invoke_latency_warm_s
+        self.nodes.append(NodeTrace(
+            node=f"qp:{pid}", kind="qp", parent=parent, chunk=ci,
+            t_issue=t_issue, t_start=t_start, t_end=t_end,
+            invoke_s=inv, fetch_s=lease.fetch_s, compute_s=compute_s,
+            request_bytes=req_bytes, response_bytes=len(rbuf),
+            warm=lease.warm, dre_hit=lease.dre_hit,
+            queries=int(creq["qidx"].shape[0]),
+            own_queries=int(creq["qidx"].shape[0]),
+            response_chunks=n_pages))
+        self.loop.at(t_end, lambda: self.rt.qp_pools[pid].release(lease))
+        self.loop.at(t_end + self._tx(len(rbuf)),
+                     lambda: respond_chunk(resp))

@@ -1,0 +1,119 @@
+"""Per-node run traces + §3.5 cost assembly for the serverless runtime.
+
+Every invocation (Coordinator, each QueryAllocator chunk, each
+QueryProcessor chunk) leaves one :class:`NodeTrace` carrying its virtual
+timeline, payload bytes, DRE outcome and billed duration. A finished run
+folds them into a :class:`RunTrace`: the makespan, aggregate DRE stats, the
+:class:`~repro.core.cost_model.LambdaFleet` inputs and the Eqs. 3–8 dollar
+breakdown.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core.cost_model import (LambdaFleet, PricingConstants,
+                                   squash_query_cost)
+from repro.core.dre import DreStats
+from repro.core.pipeline import SearchStats
+
+__all__ = ["NodeTrace", "RunTrace", "assemble_run_trace"]
+
+
+@dataclasses.dataclass
+class NodeTrace:
+    """One invocation's timeline (virtual seconds) and payload accounting."""
+
+    node: str                 # "co", "qa:<id>", "qp:<pid>"
+    kind: str                 # "co" | "qa" | "qp"
+    parent: str               # invoking node's name ("client" for the CO)
+    chunk: int                # chunk index within the logical request
+    t_issue: float            # parent issued the invocation
+    t_start: float            # container entered the handler
+    t_end: float              # response sent (billing stops here)
+    invoke_s: float           # cold/warm invocation overhead
+    fetch_s: float            # DRE-miss S3 fetch time (0 on a hit)
+    compute_s: float          # handler busy time (measured or configured)
+    request_bytes: int
+    response_bytes: int
+    warm: bool
+    dre_hit: bool
+    queries: int              # queries carried by this chunk's request
+    own_queries: int = 0      # queries in the node's *own* slice (QA/QP work)
+    response_chunks: int = 1  # >1 → response exceeded the cap and paginated
+
+    @property
+    def billed_s(self) -> float:
+        """Lambda bills wall time from handler entry to response."""
+        return max(self.t_end - self.t_start, 0.0)
+
+
+@dataclasses.dataclass
+class RunTrace:
+    """Aggregate accounting for one ``ServerlessRuntime.search`` run."""
+
+    nodes: List[NodeTrace]
+    makespan_s: float
+    escalations: int          # (query, partition) visits past the Alg. 1 cut
+    request_bytes: int
+    response_bytes: int
+    dre: DreStats
+    efs_reads: int
+    efs_read_bytes: int
+    stats: SearchStats
+    fleet: Optional[LambdaFleet] = None
+    cost: Optional[Dict] = None
+
+    @property
+    def payload_bytes(self) -> int:
+        return self.request_bytes + self.response_bytes
+
+    def invocations(self, kind: Optional[str] = None) -> int:
+        return sum(1 for n in self.nodes if kind is None or n.kind == kind)
+
+
+def assemble_run_trace(
+    nodes: List[NodeTrace],
+    *,
+    makespan_s: float,
+    escalations: int,
+    dre: DreStats,
+    efs_reads: int,
+    efs_read_bytes: int,
+    stats: SearchStats,
+    mem_qa_mb: int,
+    mem_qp_mb: int,
+    mem_co_mb: int,
+    prices: PricingConstants,
+) -> RunTrace:
+    """Fold node traces into fleet inputs and the Eqs. 3–8 breakdown."""
+    t_qa = sum(n.billed_s for n in nodes if n.kind == "qa")
+    t_qp = sum(n.billed_s for n in nodes if n.kind == "qp")
+    t_co = sum(n.billed_s for n in nodes if n.kind == "co")
+    fleet = LambdaFleet(
+        n_qa=sum(1 for n in nodes if n.kind == "qa"),
+        n_qp=sum(1 for n in nodes if n.kind == "qp"),
+        mem_qa_mb=mem_qa_mb,
+        mem_qp_mb=mem_qp_mb,
+        mem_co_mb=mem_co_mb,
+        t_qa_s=t_qa,
+        t_qp_s=t_qp,
+        t_co_s=t_co,
+        s3_gets=dre.s3_gets,
+        efs_reads=efs_reads,
+        efs_read_bytes=efs_read_bytes,
+    )
+    return RunTrace(
+        nodes=nodes,
+        makespan_s=makespan_s,
+        escalations=escalations,
+        request_bytes=sum(n.request_bytes for n in nodes),
+        response_bytes=sum(n.response_bytes for n in nodes),
+        dre=dre,
+        efs_reads=efs_reads,
+        efs_read_bytes=efs_read_bytes,
+        stats=stats,
+        fleet=fleet,
+        cost=squash_query_cost(fleet, prices),
+    )

@@ -1,6 +1,7 @@
 """Attribute quantization + filter mask tests (paper §2.3, Fig. 4)."""
 
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import attributes as am
@@ -81,6 +82,77 @@ def test_filter_equals_raw_semantics_property(seed, card, op):
     f = np.asarray(am.filter_mask(r, idx.codes))
     gt = am.ground_truth_mask(attrs, [pred])
     np.testing.assert_array_equal(f, gt)
+
+
+def test_empty_predicate_list_edge_case():
+    """No predicates: R is all-ones over valid cells, selectivity 1.0."""
+    attrs = _uniform_attrs(n=500, a=2)
+    idx = am.build_attribute_index(attrs)
+    r = am.build_r_lookup(idx, [])
+    for a in range(idx.num_attributes):
+        k = int(idx.cells[a])
+        assert r[:k, a].all() and not r[k:, a].any()
+    assert am.predicate_selectivity(attrs, []) == 1.0
+    assert am.ground_truth_mask(attrs, []).all()
+
+
+def test_in_with_single_value_equals_equality():
+    attrs = _uniform_attrs(n=3000, a=1, card=8, seed=11)
+    idx = am.build_attribute_index(attrs)
+    p_in = am.Predicate(attr=0, op="IN", values=(5.0,))
+    p_eq = am.Predicate(attr=0, op="=", lo=5.0)
+    f_in = np.asarray(am.filter_mask(am.build_r_lookup(idx, [p_in]), idx.codes))
+    f_eq = np.asarray(am.filter_mask(am.build_r_lookup(idx, [p_eq]), idx.codes))
+    np.testing.assert_array_equal(f_in, f_eq)
+    assert f_in.sum() > 0, "degenerate test: value 5 never drawn"
+
+
+def test_between_with_lo_equals_hi():
+    attrs = _uniform_attrs(n=3000, a=1, card=8, seed=12)
+    idx = am.build_attribute_index(attrs)
+    p_b = am.Predicate(attr=0, op="B", lo=3.0, hi=3.0)
+    p_eq = am.Predicate(attr=0, op="=", lo=3.0)
+    f_b = np.asarray(am.filter_mask(am.build_r_lookup(idx, [p_b]), idx.codes))
+    f_eq = np.asarray(am.filter_mask(am.build_r_lookup(idx, [p_eq]), idx.codes))
+    np.testing.assert_array_equal(f_b, f_eq)
+    gt = am.ground_truth_mask(attrs, [p_b])
+    np.testing.assert_array_equal(f_b, gt)
+    # inverted bounds pass nothing
+    p_inv = am.Predicate(attr=0, op="B", lo=4.0, hi=2.0)
+    f_inv = np.asarray(am.filter_mask(am.build_r_lookup(idx, [p_inv]),
+                                      idx.codes))
+    assert not f_inv.any()
+
+
+def test_disjunct_group_or_combination():
+    """Predicates sharing a group id OR together; groups AND with the rest."""
+    attrs = _uniform_attrs(n=5000, a=2, card=16, seed=13)
+    idx = am.build_attribute_index(attrs)
+    preds = [
+        am.Predicate(attr=0, op="<", lo=3.0, group=0),
+        am.Predicate(attr=0, op=">", lo=12.0, group=0),
+        am.Predicate(attr=1, op="B", lo=4.0, hi=11.0),
+    ]
+    r = am.build_r_lookup(idx, preds)
+    f = np.asarray(am.filter_mask(r, idx.codes))
+    raw = ((attrs[:, 0] < 3.0) | (attrs[:, 0] > 12.0)) & \
+        (attrs[:, 1] >= 4.0) & (attrs[:, 1] <= 11.0)
+    np.testing.assert_array_equal(f, raw)
+    assert 0 < f.sum() < attrs.shape[0]
+    np.testing.assert_array_equal(am.ground_truth_mask(attrs, preds), raw)
+    sel = am.predicate_selectivity(attrs, preds)
+    assert sel == pytest.approx(raw.mean())
+
+
+def test_disjunct_group_cross_attribute_rejected():
+    attrs = _uniform_attrs(n=200, a=2)
+    idx = am.build_attribute_index(attrs)
+    preds = [am.Predicate(attr=0, op="<", lo=3.0, group=1),
+             am.Predicate(attr=1, op=">", lo=12.0, group=1)]
+    with pytest.raises(ValueError, match="spans attributes"):
+        am.build_r_lookup(idx, preds)
+    with pytest.raises(ValueError, match="spans attributes"):
+        am.ground_truth_mask(attrs, preds)
 
 
 def test_selectivity_targeting():

@@ -168,3 +168,17 @@ def test_service_routes_and_accounts(built):
     np.testing.assert_array_equal(ids_a, ids_ref)
     with pytest.raises(ValueError):
         VectorSearchService(index, ServiceConfig(backend="torch"))
+
+
+def test_service_validates_per_call_backend(built):
+    """Regression: a bad per-call backend string must fail at the service
+    boundary — before touching the index — and leave accounting unchanged."""
+    ds, preds, index = built
+    svc = VectorSearchService(index, ServiceConfig(backend="auto"))
+    before_requests = svc.requests
+    before_stats = svc.stats.queries
+    with pytest.raises(ValueError, match="unknown backend 'torch'"):
+        svc.query(ds.queries[:2], preds, backend="torch")
+    assert svc.requests == before_requests
+    assert svc.stats.queries == before_stats
+    assert all(v == 0 for v in svc.queries_served.values())

@@ -1,4 +1,5 @@
-"""Tests for the serverless runtime pieces: Alg. 2 tree, DRE, cost model."""
+"""Tests for the serverless subsystem: Alg. 2 tree, DRE, cost model, and the
+event-driven Coordinator → QueryAllocator → QueryProcessor runtime."""
 
 import numpy as np
 import pytest
@@ -144,3 +145,229 @@ def test_cost_monotonicity(n_qa, n_qp, t):
         cost_model.squash_query_cost(more)["total"]
         >= cost_model.squash_query_cost(base)["total"]
     )
+
+
+# ======================================================== serverless runtime
+
+from repro.core.attributes import Predicate  # noqa: E402
+from repro.core.pipeline import SquashConfig, SquashIndex  # noqa: E402
+from repro.data import synthetic  # noqa: E402
+from repro.serverless import (PayloadOverflowError, RuntimeConfig,  # noqa: E402
+                              ServerlessRuntime, decode_message,
+                              encode_message)
+
+
+@pytest.fixture(scope="module")
+def built():
+    ds = synthetic.make_vector_dataset("sift1m", scale=0.004, num_queries=12,
+                                       seed=7)
+    preds = synthetic.default_predicates(ds.attr_cardinality)
+    cfg = SquashConfig(num_partitions=5, kmeans_iters=4, lloyd_iters=6)
+    index = SquashIndex.build(ds.vectors, ds.attributes, cfg, seed=7)
+    return ds, preds, index
+
+
+def _runtime(index, **kw):
+    kw.setdefault("branching", 3)
+    kw.setdefault("max_level", 2)
+    return ServerlessRuntime(index, RuntimeConfig(**kw))
+
+
+def test_codec_roundtrip():
+    msg = {
+        "qidx": np.arange(7, dtype=np.int32),
+        "queries": np.random.default_rng(0).normal(size=(7, 16)),
+        "rows": np.array([], dtype=np.int32),
+        "k": 10,
+        "preds": [{"attr": 0, "op": "B", "lo": 1.0, "hi": 2.0,
+                   "values": [], "group": None}],
+    }
+    out = decode_message(encode_message(msg))
+    assert out["k"] == 10 and out["preds"] == msg["preds"]
+    np.testing.assert_array_equal(out["qidx"], msg["qidx"])
+    np.testing.assert_array_equal(out["queries"], msg["queries"])
+    assert out["rows"].dtype == np.int32 and out["rows"].shape == (0,)
+
+
+def test_runtime_matches_jax_backend_bitwise(built):
+    """Acceptance: Coordinator → QA → QP ids are bitwise-identical to
+    SquashIndex.search(backend='jax'), stats counters equal."""
+    ds, preds, index = built
+    rt = _runtime(index)
+    res = rt.search(ds.queries, preds, k=10)
+    ids_j, d_j, s_j = index.search(ds.queries, preds, k=10, backend="jax")
+    np.testing.assert_array_equal(res.ids, ids_j)
+    np.testing.assert_array_equal(np.isfinite(res.dists), np.isfinite(d_j))
+    fin = np.isfinite(d_j)
+    np.testing.assert_array_equal(res.dists[fin], d_j[fin])
+    assert res.stats == s_j
+
+
+def test_runtime_unfiltered_and_empty_predicates(built):
+    ds, _, index = built
+    rt = _runtime(index)
+    res = rt.search(ds.queries, [], k=5)
+    ids_j, _, _ = index.search(ds.queries, [], k=5, backend="jax")
+    np.testing.assert_array_equal(res.ids, ids_j)
+    impossible = [Predicate(attr=0, op="=", lo=1e9)]
+    res2 = rt.search(ds.queries[:4], impossible, k=5)
+    assert (res2.ids == -1).all() and np.isinf(res2.dists).all()
+    assert res2.trace.invocations("qp") == 0
+
+
+def test_tree_fanout_every_qa_invoked_once(built):
+    """Fan-out correctness: each of the N_QA allocators is invoked exactly
+    once per batch (no chunking), the coordinator once, and per-node traces
+    carry a consistent timeline."""
+    ds, preds, index = built
+    rt = _runtime(index, branching=3, max_level=2)
+    res = rt.search(ds.queries, preds, k=10)
+    t = res.trace
+    qa_nodes = [n for n in t.nodes if n.kind == "qa"]
+    assert len(qa_nodes) == invocation.tree_size(3, 2) == 12
+    assert sorted(n.node for n in qa_nodes) == sorted(
+        f"qa:{i}" for i in range(12))
+    assert t.invocations("co") == 1
+    for n in t.nodes:
+        assert n.t_issue <= n.t_start <= n.t_end
+        assert n.billed_s >= n.compute_s
+    assert t.makespan_s >= max(n.t_end for n in t.nodes)
+    # every query lands in exactly one QA's own slice
+    assert sum(n.own_queries for n in qa_nodes) == ds.queries.shape[0]
+
+
+def test_filter_count_escalation_path(built):
+    """§2.5 single-pass guarantee: a highly selective predicate forces
+    Alg. 1 past the Eq. 1 threshold cut; the runtime reports the escalated
+    visits and still matches the reference plane."""
+    ds, _, index = built
+    narrow = [Predicate(attr=0, op="=", lo=float(ds.attributes[0, 0])),
+              Predicate(attr=1, op="=", lo=float(ds.attributes[0, 1]))]
+    rt = _runtime(index)
+    res = rt.search(ds.queries, narrow, k=10)
+    ids_j, _, s_j = index.search(ds.queries, narrow, k=10, backend="jax")
+    np.testing.assert_array_equal(res.ids, ids_j)
+    assert res.stats == s_j
+    assert res.trace.escalations > 0, "narrow predicate must escalate"
+    # escalation is bounded by the visited count
+    assert res.trace.escalations <= res.stats.partitions_visited
+
+
+def test_payload_overflow_error_policy(built):
+    ds, preds, index = built
+    rt = _runtime(index, max_payload_bytes=4096, overflow="error")
+    with pytest.raises(PayloadOverflowError):
+        rt.search(ds.queries, preds, k=10)
+
+
+def test_payload_overflow_chunking_preserves_results(built):
+    ds, preds, index = built
+    rt = _runtime(index, max_payload_bytes=4096, overflow="chunk")
+    res = rt.search(ds.queries, preds, k=10)
+    ids_j, _, _ = index.search(ds.queries, preds, k=10, backend="jax")
+    np.testing.assert_array_equal(res.ids, ids_j)
+    # chunking means strictly more invocations than the unchunked tree
+    base = _runtime(index).search(ds.queries, preds, k=10)
+    assert len(res.trace.nodes) > len(base.trace.nodes)
+    for n in res.trace.nodes:
+        assert n.request_bytes <= 4096
+
+
+def test_response_payload_pagination(built):
+    """Oversized responses (large k) are budgeted too: under the chunk
+    policy they paginate — extra warm round-trips in the trace — and the
+    merged results still match the reference plane."""
+    ds, preds, index = built
+    rt = _runtime(index, max_payload_bytes=4096, overflow="chunk")
+    res = rt.search(ds.queries, preds, k=200)
+    ids_j, _, _ = index.search(ds.queries, preds, k=200, backend="jax")
+    np.testing.assert_array_equal(res.ids, ids_j)
+    paged = [n for n in res.trace.nodes if n.response_chunks > 1]
+    assert paged, "k=200 responses must exceed the 4 KB budget"
+
+
+def test_single_query_payload_cannot_chunk(built):
+    """A payload that cannot split below one query raises even under the
+    chunk policy."""
+    ds, preds, index = built
+    rt = _runtime(index, max_payload_bytes=256, overflow="chunk")
+    with pytest.raises(PayloadOverflowError):
+        rt.search(ds.queries[:2], preds, k=10)
+
+
+def test_dre_warm_reuse_across_batches(built):
+    """Second batch on a warm fleet: zero S3 GETs, all DRE hits, smaller
+    makespan and cost (Fig. 6 shape)."""
+    ds, preds, index = built
+    rt = _runtime(index, warm_prob=1.0)
+    r1 = rt.search(ds.queries, preds, k=10)
+    r2 = rt.search(ds.queries, preds, k=10)
+    assert r1.trace.dre.s3_gets > 0
+    assert r2.trace.dre.s3_gets == 0
+    assert r2.trace.dre.dre_hits == r2.trace.dre.invocations
+    assert r2.trace.makespan_s < r1.trace.makespan_s
+    np.testing.assert_array_equal(r1.ids, r2.ids)
+
+
+def test_dre_disabled_refetches(built):
+    ds, preds, index = built
+    rt = _runtime(index, use_dre=False)
+    rt.search(ds.queries, preds, k=10)
+    r2 = rt.search(ds.queries, preds, k=10)
+    # every QA/QP invocation refetches even on warm containers
+    assert r2.trace.dre.s3_gets == r2.trace.dre.invocations
+    assert r2.trace.dre.dre_hits == 0
+
+
+def test_cost_and_fleet_assembly(built):
+    ds, preds, index = built
+    rt = _runtime(index, qa_compute_s=0.1, qp_compute_s=0.2, co_compute_s=0.01)
+    res = rt.search(ds.queries, preds, k=10)
+    t = res.trace
+    c = t.cost
+    assert c["total"] == pytest.approx(
+        c["lambda_invocation"] + c["lambda_runtime"] + c["s3"] + c["efs"])
+    assert c["total"] > 0 and c["lambda_runtime"] > 0
+    assert t.fleet.n_qa == t.invocations("qa")
+    assert t.fleet.n_qp == t.invocations("qp")
+    assert t.fleet.s3_gets == t.dre.s3_gets
+    assert t.fleet.efs_read_bytes == t.efs_read_bytes
+    assert t.efs_reads == res.stats.refined
+    assert t.payload_bytes == t.request_bytes + t.response_bytes > 0
+    # billed time covers at least the configured compute
+    assert t.fleet.t_qp_s >= 0.2 * t.invocations("qp")
+
+
+def test_sequential_strawman_slower_than_tree(built):
+    """Fig. 7 via the runtime: the CO-invokes-everything strawman's makespan
+    exceeds the Alg. 2 tree's for the same fleet and workload."""
+    ds, preds, index = built
+    fixed = dict(qa_compute_s=0.05, qp_compute_s=0.05, co_compute_s=0.01)
+    tree = _runtime(index, branching=3, max_level=2, **fixed)
+    seq = _runtime(index, branching=3, max_level=2, sequential=True, **fixed)
+    r_tree = tree.search(ds.queries, preds, k=10)
+    r_seq = seq.search(ds.queries, preds, k=10)
+    np.testing.assert_array_equal(r_tree.ids, r_seq.ids)
+    assert r_seq.trace.makespan_s > r_tree.trace.makespan_s
+
+
+def test_runtime_single_query_and_large_k(built):
+    ds, preds, index = built
+    rt = _runtime(index)
+    for qn, k in ((1, 10), (3, 50)):
+        res = rt.search(ds.queries[:qn], preds, k=k)
+        ids_j, _, _ = index.search(ds.queries[:qn], preds, k=k, backend="jax")
+        np.testing.assert_array_equal(res.ids, ids_j)
+
+
+def test_service_serverless_backend(built):
+    from repro.serve.vector_service import ServiceConfig, VectorSearchService
+
+    ds, preds, index = built
+    svc = VectorSearchService(index, ServiceConfig(backend="auto"))
+    ids, _, _ = svc.query(ds.queries, preds, backend="serverless")
+    ids_j, _, _ = index.search(ds.queries, preds, k=10, backend="jax")
+    np.testing.assert_array_equal(ids, ids_j)
+    assert svc.last_trace is not None
+    assert svc.last_trace.cost["total"] > 0
+    assert svc.queries_served["serverless"] == ds.queries.shape[0]
