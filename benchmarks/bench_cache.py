@@ -1,0 +1,128 @@
+"""§5.6 result cache — Zipf workload: hit-rate vs latency and dollars.
+
+Drives a skewed (Zipf-distributed) query stream through the real serverless
+runtime twice — cache disabled vs enabled — and reports, per skew exponent,
+the observed Coordinator hit rate against the latency and §3.5 dollar
+reductions. The dollar axis follows the Fig. 8 cost shape: per-batch cost
+extrapolated to daily query volumes, so the cache's effect reads directly
+as a left-shift of the serverless cost curve (the crossover against the
+provisioned-server baseline moves to higher volumes as hit rate grows).
+
+Results parity is asserted on every wave: the cache-on run must return ids
+bitwise-identical to the cache-off run.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import build_tiny_squash_index, header, save_json
+
+WAVES_QUICK = 6
+WAVES_FULL = 16
+BATCH = 16                 # queries per wave (pool sampled with Zipf skew)
+POOL = 48                  # distinct queries in the workload
+ZIPF_EXPONENTS = (0.0, 0.8, 1.4)   # 0.0 = uniform; higher = more repeats
+
+_COMPUTE = dict(qa_compute_s=0.02, qp_compute_s=0.05, co_compute_s=0.005)
+_DAILY_VOLUMES = (10_000, 100_000, 1_000_000, 10_000_000)
+
+
+def _zipf_stream(pool_size: int, batch: int, waves: int, s: float,
+                 seed: int) -> np.ndarray:
+    """(waves, batch) indices into the query pool, Zipf(s)-distributed."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, pool_size + 1, dtype=np.float64)
+    p = ranks ** -s
+    p /= p.sum()
+    return rng.choice(pool_size, size=(waves, batch), p=p)
+
+
+def _drive(rt, pool_queries, preds, stream):
+    ids = []
+    makespan = cost = payload = invocations = hits = lookups = 0.0
+    for wave in stream:
+        res = rt.search(pool_queries[wave], preds, k=10)
+        ids.append(res.ids)
+        tr = res.trace
+        makespan += tr.makespan_s
+        cost += tr.cost["total"]
+        payload += tr.payload_bytes
+        invocations += len(tr.nodes)
+        hits += tr.cache_hits
+        lookups += tr.cache_hits + tr.cache_misses
+    return ids, {
+        "makespan_s": makespan, "cost": cost, "payload_bytes": int(payload),
+        "invocations": int(invocations),
+        "hit_rate": hits / lookups if lookups else 0.0,
+    }
+
+
+def run(quick: bool = True) -> dict:
+    from repro.core.cost_model import daily_cost_curve, server_baseline_cost
+    from repro.serverless import RuntimeConfig, ServerlessRuntime
+
+    header("§5.6 result cache — Zipf workload: hit-rate vs latency / $")
+    ds, preds, idx = build_tiny_squash_index(seed=5, num_queries=POOL)
+    waves = WAVES_QUICK if quick else WAVES_FULL
+    base = dict(branching=4, max_level=2, warm_prob=0.95, **_COMPUTE)
+
+    rows = []
+    for s in ZIPF_EXPONENTS:
+        stream = _zipf_stream(POOL, BATCH, waves, s, seed=11)
+        off = ServerlessRuntime(idx, RuntimeConfig(**base))
+        on = ServerlessRuntime(idx, RuntimeConfig(cache_enabled=True, **base))
+        ids_off, m_off = _drive(off, ds.queries, preds, stream)
+        ids_on, m_on = _drive(on, ds.queries, preds, stream)
+        for a, b in zip(ids_off, ids_on):
+            assert np.array_equal(a, b), "cache broke result parity"
+
+        n_queries = waves * BATCH
+        daily_on = daily_cost_curve(m_on["cost"] / waves, BATCH,
+                                    _DAILY_VOLUMES)
+        daily_off = daily_cost_curve(m_off["cost"] / waves, BATCH,
+                                     _DAILY_VOLUMES)
+        row = {
+            "zipf_s": s,
+            "waves": waves,
+            "queries": n_queries,
+            "hit_rate": m_on["hit_rate"],
+            "makespan_off_s": m_off["makespan_s"],
+            "makespan_on_s": m_on["makespan_s"],
+            "latency_reduction": m_off["makespan_s"] / m_on["makespan_s"],
+            "dollars_per_1k_off": m_off["cost"] * 1000 / n_queries,
+            "dollars_per_1k_on": m_on["cost"] * 1000 / n_queries,
+            "cost_reduction": m_off["cost"] / m_on["cost"],
+            "payload_off": m_off["payload_bytes"],
+            "payload_on": m_on["payload_bytes"],
+            "invocations_off": m_off["invocations"],
+            "invocations_on": m_on["invocations"],
+            "daily_cost_on": daily_on,
+            "daily_cost_off": daily_off,
+            "daily_volumes": list(_DAILY_VOLUMES),
+            "server_baseline_daily": server_baseline_cost(hours=24.0),
+        }
+        rows.append(row)
+        print(f"  zipf s={s:.1f}: hit-rate {row['hit_rate']:.2f} → "
+              f"latency {row['latency_reduction']:.2f}x, "
+              f"$ {row['cost_reduction']:.2f}x "
+              f"(${row['dollars_per_1k_off']:.5f} → "
+              f"${row['dollars_per_1k_on']:.5f} per 1k), "
+              f"invocations {row['invocations_off']} → "
+              f"{row['invocations_on']}")
+
+    # Monotone sanity: more skew → more repeats → higher hit rate, and any
+    # nonzero hit rate must strictly reduce invocations + payload + dollars.
+    hit_rates = [r["hit_rate"] for r in rows]
+    assert hit_rates == sorted(hit_rates), "hit rate must grow with skew"
+    for r in rows:
+        if r["hit_rate"] > 0:
+            assert r["invocations_on"] < r["invocations_off"]
+            assert r["payload_on"] < r["payload_off"]
+            assert r["cost_reduction"] > 1.0
+    save_json("bench_cache", {"rows": rows})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -8,6 +8,7 @@ Paper-artifact map (DESIGN.md §6):
   Fig. 8  → bench_cost            Fig. 9  → bench_qps
   Fig. 10 → bench_scaling         Table 3 → bench_caching
   Alg. 2  → bench_invocation      kernels → bench_kernels
+  §5.6    → bench_cache (runtime result cache, Zipf workload)
   §Roofline → roofline (subprocess: needs 512 XLA host devices before
               jax init, so it cannot share this interpreter)
 """
@@ -91,10 +92,28 @@ def smoke() -> int:
     assert tr.cost["total"] > 0 and tr.dre.invocations > 0
     assert tr.invocations("qa") == 12 and tr.invocations("co") == 1
 
+    # §5.6 result-cache gate: with the cache enabled, both the cold pass and
+    # the fully-repeated pass must stay bitwise-identical to the jax plane,
+    # while the repeat pass shows strictly fewer invocations, payload bytes
+    # and §3.5 dollars (hits never enter the QA/QP fleet).
+    rt_c = ServerlessRuntime(idx, RuntimeConfig(branching=3, max_level=2,
+                                                cache_enabled=True))
+    c1 = rt_c.search(ds.queries, preds, k=10)
+    c2 = rt_c.search(ds.queries, preds, k=10)
+    assert np.array_equal(c1.ids, ids_j), "cache-on cold ids diverged"
+    assert np.array_equal(c2.ids, ids_j), "cache-served ids diverged"
+    t2 = c2.trace
+    assert t2.cache_hits == ds.queries.shape[0] and t2.cache_misses == 0
+    assert len(t2.nodes) < len(tr.nodes)
+    assert t2.payload_bytes < tr.payload_bytes
+    assert t2.cost["total"] < tr.cost["total"]
+
     print(f"[smoke] OK in {time.time() - t0:.1f}s — recall@10="
-          f"{recalls['jax']:.3f}, ids identical across numpy/jax/serverless; "
-          f"runtime: {tr.invocations('qa')} QA + {tr.invocations('qp')} QP, "
-          f"${tr.cost['total']:.6f}/batch")
+          f"{recalls['jax']:.3f}, ids identical across numpy/jax/serverless"
+          f" (±cache); runtime: {tr.invocations('qa')} QA + "
+          f"{tr.invocations('qp')} QP, ${tr.cost['total']:.6f}/batch; "
+          f"cached repeat: {len(t2.nodes)} invocation(s), "
+          f"${t2.cost['total']:.6f}/batch")
     return 0
 
 
@@ -112,14 +131,16 @@ def main(argv=None) -> int:
         return smoke()
     quick = not args.full
 
-    from benchmarks import (bench_ablations, bench_baselines, bench_caching,
-                            bench_compression, bench_cost, bench_dre,
-                            bench_invocation, bench_kernels, bench_kv_quant,
-                            bench_qps, bench_recall, bench_scaling)
+    from benchmarks import (bench_ablations, bench_baselines, bench_cache,
+                            bench_caching, bench_compression, bench_cost,
+                            bench_dre, bench_invocation, bench_kernels,
+                            bench_kv_quant, bench_qps, bench_recall,
+                            bench_scaling)
     suite = {
         "compression": bench_compression,
         "invocation": bench_invocation,
         "dre": bench_dre,
+        "cache": bench_cache,
         "cost": bench_cost,
         "kernels": bench_kernels,
         "recall": bench_recall,

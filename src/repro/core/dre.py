@@ -1,22 +1,35 @@
-"""Data Retention Exploitation (paper §3.2) + optional result cache (§3.2/§5.6).
+"""Data Retention Exploitation (paper §3.2) + result cache (§3.2/§5.6).
 
 DRE: FaaS containers persist process-global state across warm invocations.
 Each QA/QP holds a singleton whose key identifies the dataset/partition; on
 invoke, if the singleton already holds matching index data the S3 fetch is
 skipped entirely. The QP-per-partition function naming
-(``squash-processor-<pid>``) guarantees a warm QP container always matches its
-partition.
+(``squash-processor-<pid>``) guarantees a warm QP container always matches
+its partition. Beyond the fetched bytes, containers also retain *derived*
+state (device-resident arrays built from the fetch) keyed per container id —
+a warm container that already materialized its partition slice skips that
+setup as well.
 
-On TPU the analogue is HBM residency of the index pytree across jitted steps;
-this simulator exists to reproduce Fig. 6 (cost / latency / S3-request
-reduction) and to drive the cost model.
+The result cache is the §5.6 layer above DRE: whole (query, predicates, k)
+results are retained at the Coordinator so repeated queries never re-enter
+the QA/QP fleet. Keys are exact — dtype-normalized query bytes plus a
+canonicalized predicate tuple — so distinct queries can never alias, and
+eviction is true LRU under both an entry cap and a byte budget.
+
+On TPU the analogue is HBM residency of the index pytree across jitted
+steps; this simulator exists to reproduce Fig. 6 (cost / latency /
+S3-request reduction) and to drive the cost model.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import random
-from typing import Dict, Hashable, Optional, Tuple
+import sys
+from collections import OrderedDict
+from typing import Dict, Hashable, Optional, Set, Tuple
+
+import numpy as np
 
 __all__ = ["ContainerPool", "ResultCache", "DreStats", "Lease"]
 
@@ -26,6 +39,7 @@ class DreStats:
     invocations: int = 0
     warm_starts: int = 0
     dre_hits: int = 0
+    derived_hits: int = 0     # retained *derived* state reused (beyond fetch)
     s3_gets: int = 0
     bytes_fetched: int = 0
     fetch_seconds: float = 0.0
@@ -68,6 +82,7 @@ class ContainerPool:
         seed: int = 0,
     ):
         self._singletons: Dict[int, Hashable] = {}   # container id → data key
+        self._derived: Dict[int, Set[Hashable]] = {}  # container id → state keys
         self._next_container = 0
         self._free: list = []
         self._rng = random.Random(seed)
@@ -83,6 +98,10 @@ class ContainerPool:
         Concurrent invocations of the same function (one wave of the
         serverless runtime) must each hold a distinct container; call
         :meth:`release` when the invocation's response has been sent.
+
+        With ``use_dre=False`` the singleton is neither consulted nor
+        installed: a DRE-off invocation must not seed retention that a later
+        DRE-on call would then score as a hit it never paid for.
         """
         warm = bool(self._free) and self._rng.random() < self.warm_prob
         if warm:
@@ -94,7 +113,8 @@ class ContainerPool:
         fetch_s = 0.0
         if not hit:
             fetch_s = self.fetch_rtt_s + data_bytes / self.fetch_bandwidth_bps
-            self._singletons[cid] = data_key
+            if use_dre:
+                self._singletons[cid] = data_key
         delta = DreStats(
             invocations=1,
             warm_starts=int(warm),
@@ -116,35 +136,136 @@ class ContainerPool:
         self.release(lease)
         return lease.warm, lease.dre_hit
 
+    # ------------------------------------------------- derived-state retention
+
+    def derived_hit(self, lease: Lease, key: Hashable,
+                    use_dre: bool = True) -> bool:
+        """True iff this lease's container already retains derived state
+        under ``key`` (e.g. the device-resident partition slice built from a
+        previous fetch). Counted in ``stats.derived_hits``."""
+        hit = use_dre and key in self._derived.get(lease.container_id, ())
+        if hit:
+            self.stats.derived_hits += 1
+        return hit
+
+    def retain_derived(self, lease: Lease, key: Hashable) -> None:
+        """Record that the lease's container now holds derived state ``key``
+        (only meaningful under DRE — callers gate on ``use_dre``)."""
+        self._derived.setdefault(lease.container_id, set()).add(key)
+
+    def clear_derived(self) -> None:
+        """Forget all retained derived state (e.g. on index invalidation),
+        so permanently-stale keys don't accumulate across rebuilds."""
+        self._derived.clear()
+
+
+def _entry_nbytes(key: Hashable, value: object) -> int:
+    """Approximate resident size of one cache entry (key + value)."""
+    n = 0
+    parts = [key, value]
+    while parts:
+        item = parts.pop()
+        if isinstance(item, tuple):
+            parts.extend(item)
+        elif isinstance(item, np.ndarray):
+            n += item.nbytes
+        elif isinstance(item, (bytes, bytearray)):
+            n += len(item)
+        else:
+            n += sys.getsizeof(item)
+    return n
+
+
+_MISSING = object()
+
 
 class ResultCache:
-    """Optional lightweight result cache (disabled by default, §5.6)."""
+    """LRU result cache over (query, predicates, k) triples (§5.6).
 
-    def __init__(self, capacity: int = 100_000):
+    Keys are **exact**: the query's dtype-normalized float64 bytes (no
+    rounding — distinct queries can never alias) plus a canonicalized
+    predicate tuple (sorted, with IN value-sets sorted) so logically equal
+    filters produce one key regardless of spelling order. Entries evict in
+    true least-recently-*used* order — ``get`` refreshes recency — under
+    both an entry-count cap and an optional byte budget with per-entry size
+    accounting.
+    """
+
+    def __init__(self, capacity: int = 100_000,
+                 max_bytes: Optional[int] = None):
         self.capacity = capacity
-        self._store: Dict[Hashable, object] = {}
+        self.max_bytes = max_bytes
+        self._store: "OrderedDict[Hashable, object]" = OrderedDict()
+        self._sizes: Dict[Hashable, int] = {}
+        self.current_bytes = 0
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+        self.invalidations = 0
 
-    def key(self, query_vec, predicates, k: int) -> Hashable:
-        pv = tuple(round(float(v), 6) for v in query_vec)
-        pp = tuple(
-            (p.attr, p.op, float(p.lo), float(p.hi), tuple(p.values), p.group)
+    @staticmethod
+    def query_key(query_vec) -> bytes:
+        """Exact dtype-normalized bytes of one query vector."""
+        return np.ascontiguousarray(
+            np.asarray(query_vec, dtype=np.float64)).tobytes()
+
+    @staticmethod
+    def canonical_predicates(predicates) -> Tuple:
+        """Order-insensitive canonical form of a predicate list (hoistable:
+        compute once per request batch, not once per query)."""
+        return tuple(sorted(
+            (int(p.attr), p.op, float(p.lo), float(p.hi),
+             tuple(sorted(float(v) for v in p.values)),
+             # None sorts before any group id without mixed-type comparison
+             (0, 0) if p.group is None else (1, int(p.group)))
             for p in predicates
-        )
-        return (pv, pp, k)
+        ))
+
+    @staticmethod
+    def key(query_vec, predicates, k: int) -> Hashable:
+        return (ResultCache.query_key(query_vec),
+                ResultCache.canonical_predicates(predicates), int(k))
 
     def get(self, key: Hashable) -> Optional[object]:
-        if key in self._store:
+        entry = self._store.get(key, _MISSING)
+        if entry is not _MISSING:
+            self._store.move_to_end(key)   # LRU refresh
             self.hits += 1
-            return self._store[key]
+            return entry
         self.misses += 1
         return None
 
     def put(self, key: Hashable, value: object) -> None:
-        if len(self._store) >= self.capacity:
-            self._store.pop(next(iter(self._store)))
+        nbytes = _entry_nbytes(key, value)
+        if key in self._store:
+            self.current_bytes -= self._sizes.pop(key)
+            del self._store[key]
+        if self.max_bytes is not None and nbytes > self.max_bytes:
+            return                          # larger than the whole budget
         self._store[key] = value
+        self._sizes[key] = nbytes
+        self.current_bytes += nbytes
+        while self._store and (
+            len(self._store) > self.capacity
+            or (self.max_bytes is not None
+                and self.current_bytes > self.max_bytes)
+        ):
+            old_key, _ = self._store.popitem(last=False)
+            self.current_bytes -= self._sizes.pop(old_key)
+            self.evictions += 1
+
+    def invalidate(self) -> None:
+        """Drop every entry (index rebuilt / dataset swapped)."""
+        self._store.clear()
+        self._sizes.clear()
+        self.current_bytes = 0
+        self.invalidations += 1
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._store
 
     @property
     def hit_rate(self) -> float:

@@ -108,8 +108,14 @@ def moe_ffn(params, x, cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
     tok_for_slot = jnp.full((e * c + 1,), t, dtype=jnp.int32)       # pad row
     tok_for_slot = tok_for_slot.at[slot].set(flat_tok.astype(jnp.int32))
     tok_for_slot = tok_for_slot[: e * c]
-    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
-    dispatched = xt_pad[tok_for_slot].reshape(e, c, d)              # (E, C, d)
+    # Masked safe-gather, NOT a concat-padded gather: gathering through a
+    # concatenate whose axis-0 operand is sharded diverges under GSPMD
+    # (tests/test_multidevice.py::test_sharded_moe_dispatch_gather_repro —
+    # this was the 2×2-mesh MoE forward divergence).
+    empty_slot = tok_for_slot >= t
+    dispatched = jnp.where(
+        empty_slot[:, None], 0.0,
+        xt[jnp.where(empty_slot, 0, tok_for_slot)]).reshape(e, c, d)
     # EXPERIMENTS.md §Perf (arctic-480b iteration 1): without this
     # constraint GSPMD replicates the dispatch buffer per device. Only
     # worth it at train/prefill token counts — at decode (t = batch) the
@@ -127,9 +133,10 @@ def moe_ffn(params, x, cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
         out = hint(out, "model", None, None)
 
     # --- combine: scatter-add weighted expert outputs back to tokens --------
+    # Same masked-gather form as dispatch (dropped entries have slot == E·C
+    # and are zeroed by the `keep` mask below anyway).
     out_flat = out.reshape(e * c, d)
-    gathered = jnp.concatenate(
-        [out_flat, jnp.zeros((1, d), out_flat.dtype)], axis=0)[slot]  # (T·K, d)
+    gathered = out_flat[jnp.where(slot >= e * c, 0, slot)]          # (T·K, d)
     weighted = gathered * flat_p[:, None].astype(gathered.dtype)
     y = jnp.zeros((t, d), x.dtype).at[flat_tok].add(
         jnp.where(keep[:, None], weighted, 0.0).astype(x.dtype))

@@ -8,7 +8,10 @@ routing decision:
 * ``backend="jax"``        — batched jitted plane (the production hot path).
 * ``backend="serverless"`` — the full event-driven Coordinator → QA → QP
   runtime (``repro.serverless``): same ids as the jax plane, plus per-node
-  latency / payload / DRE / cost traces (kept on ``last_trace``).
+  latency / payload / DRE / cost traces (kept on ``last_trace``). With
+  ``ServiceConfig(cache_enabled=True)`` the runtime's §5.6 result cache
+  serves repeated queries at the Coordinator; ``swap_index`` invalidates
+  it when the index is rebuilt.
 * ``backend="auto"``       — route by batch size: single-query lookups take
   the loop (no trace/dispatch overhead), real batches the batched plane.
 
@@ -42,6 +45,12 @@ class ServiceConfig:
     backend: str = "auto"              # numpy | jax | serverless | auto
     default_k: int = 10
     serverless: Optional[object] = None  # repro.serverless.RuntimeConfig
+    # §5.6 result-cache knobs for the serverless backend. They overlay onto
+    # the RuntimeConfig (an explicit ``serverless`` config that already
+    # enables the cache wins), so callers can turn caching on per service
+    # without hand-building a runtime config.
+    cache_enabled: bool = False
+    result_cache_bytes: int = 64 * 1024 * 1024
 
 
 class VectorSearchService:
@@ -70,8 +79,28 @@ class VectorSearchService:
             from repro.serverless import RuntimeConfig, ServerlessRuntime
 
             cfg = self.config.serverless or RuntimeConfig()
+            if self.config.cache_enabled and not cfg.cache_enabled:
+                cfg = dataclasses.replace(
+                    cfg, cache_enabled=True,
+                    result_cache_bytes=self.config.result_cache_bytes)
             self._runtime = ServerlessRuntime(self.index, cfg)
         return self._runtime
+
+    @property
+    def result_cache(self):
+        """The serverless backend's §5.6 ResultCache (None if unbuilt/off)."""
+        return self._runtime.result_cache if self._runtime else None
+
+    def swap_index(self, index: SquashIndex) -> None:
+        """Rebind the service to a rebuilt index.
+
+        Drops the serverless runtime (its stacked device payload, container
+        pools and result cache all describe the old index) so the next
+        serverless call rebuilds against the new one — cached results from
+        the old index can never be served.
+        """
+        self.index = index
+        self._runtime = None
 
     def warmup(self, num_queries: int, k: Optional[int] = None) -> None:
         """Pre-trace the jax plane for a batch shape (DRE-style warm start)."""

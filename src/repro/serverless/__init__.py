@@ -9,13 +9,16 @@ real SQUASH data plane:
 * ``nodes``   — the three actor roles: Coordinator fan-out/merge, QA
   attribute filtering + Alg. 1 selection with the §2.5 filter-count
   guarantee, QP Stages 3–5 on its partition shard (``core.dataplane``).
-* ``traces``  — per-node latency/payload/DRE records and the §3.5 cost
-  assembly (``core.cost_model``).
+* ``traces``  — per-node latency/payload/DRE/cache records and the §3.5
+  cost assembly (``core.cost_model``).
 * ``runtime`` — the façade tying it together: ``ServerlessRuntime.search``
   returns ids bitwise-identical to ``SquashIndex.search(backend="jax")``
-  plus a full run trace.
+  plus a full run trace. With ``RuntimeConfig(cache_enabled=True)`` the
+  Coordinator consults the §5.6 result cache (``core.dre.ResultCache``)
+  and only cache-miss queries traverse the Alg. 2 tree.
 """
 
+from repro.core.dre import ResultCache
 from repro.serverless.events import EventLoop
 from repro.serverless.payload import (MAX_SYNC_PAYLOAD_BYTES,
                                       PayloadOverflowError, decode_message,
@@ -26,6 +29,6 @@ from repro.serverless.traces import NodeTrace, RunTrace
 
 __all__ = [
     "EventLoop", "MAX_SYNC_PAYLOAD_BYTES", "PayloadOverflowError",
-    "decode_message", "encode_message", "RuntimeConfig", "SearchResult",
-    "ServerlessRuntime", "NodeTrace", "RunTrace",
+    "decode_message", "encode_message", "ResultCache", "RuntimeConfig",
+    "SearchResult", "ServerlessRuntime", "NodeTrace", "RunTrace",
 ]

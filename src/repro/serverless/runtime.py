@@ -12,16 +12,28 @@ old simulators only sketched:
 * payload byte budgets — every hop is encoded through the codec and checked
   against the Lambda-style 6 MB cap with an explicit overflow policy;
 * DRE — warm-container reuse through ``core.dre.ContainerPool`` leases, one
-  pool per function (``squash-allocator``, ``squash-processor-<pid>``);
+  pool per function (``squash-allocator``, ``squash-processor-<pid>``),
+  extended from "dataset fetched" to *derived-state retention*: a warm QP
+  container that already materialized its partition slice skips the setup
+  step on top of skipping the S3 fetch;
+* the §5.6 result cache — with ``cache_enabled`` the Coordinator splits
+  every incoming batch into hit/miss query slices before fan-out: only
+  misses traverse the Alg. 2 tree (hits pay no QA/QP GB-seconds and no
+  fan-out payload bytes) and are inserted on completion; hits merge back
+  into the final :class:`SearchResult` and are marked cache-served on the
+  CO's :class:`~repro.serverless.traces.NodeTrace` and the
+  :class:`~repro.serverless.traces.RunTrace`;
 * per-node latency traces and the §3.5 dollar breakdown via
   ``core.cost_model``.
 
 Parity contract: for the same index/queries/predicates/k, the returned ids
-are **bitwise identical** to ``SquashIndex.search(backend="jax")`` and the
-aggregate :class:`~repro.core.pipeline.SearchStats` match exactly — the QPs
+are **bitwise identical** to ``SquashIndex.search(backend="jax")`` — the QPs
 run the same jitted plane over partition slices of the same stacked payload,
 and the ascending-partition stable merge reproduces the reference
-tie-breaking.
+tie-breaking. The aggregate :class:`~repro.core.pipeline.SearchStats` match
+exactly too, *except* that on a cache-enabled run the stage counters cover
+only the miss slice (cache-served queries did no stage work; the trace's
+``cache_hits`` accounts for them).
 """
 
 from __future__ import annotations
@@ -35,7 +47,7 @@ import numpy as np
 from repro.core import dataplane, invocation
 from repro.core.attributes import Predicate
 from repro.core.cost_model import PricingConstants
-from repro.core.dre import ContainerPool, DreStats, Lease
+from repro.core.dre import ContainerPool, DreStats, Lease, ResultCache
 from repro.core.pipeline import SearchStats, SquashIndex
 from repro.serverless import nodes as nd
 from repro.serverless import payload as pl
@@ -62,6 +74,13 @@ class RuntimeConfig:
     warm_prob: float = 1.0
     fetch_bandwidth_bps: float = 85e6
     fetch_rtt_s: float = 0.02
+    qp_setup_s: float = 0.002          # derived-state build on first use of a
+                                       # container (skipped on a retained hit)
+
+    # §5.6 result cache (CO-level hit/miss split; off by default).
+    cache_enabled: bool = False
+    result_cache_bytes: int = 64 * 1024 * 1024
+    result_cache_entries: int = 100_000
 
     # Invocation latency model (Alg. 2 / Fig. 7).
     invoke_latency_warm_s: float = 0.015
@@ -145,6 +164,11 @@ class ServerlessRuntime:
             for pid in range(self.n_qp)
         }
         self.allocator = nd.QueryAllocator(index)
+        self.result_cache = (
+            ResultCache(capacity=self.cfg.result_cache_entries,
+                        max_bytes=self.cfg.result_cache_bytes)
+            if self.cfg.cache_enabled else None)
+        self.index_version = 0
         self._dtype = np.float64 if jax.config.jax_enable_x64 else np.float32
         self._stacked = None
         self._processors: Dict[int, nd.QueryProcessor] = {}
@@ -192,6 +216,23 @@ class ServerlessRuntime:
                 trace_counter=self._trace_counter)
             self._planes[key] = plane
         return plane
+
+    def invalidate_cache(self) -> None:
+        """Drop cached results and retained derived state.
+
+        Bumping ``index_version`` makes every container's retained derived
+        state stale (their keys embed the version); clearing the pools'
+        retained sets keeps permanently-stale keys from accumulating. This
+        does NOT rebind the runtime to new index data — the stacked device
+        payload and per-partition processors still describe the index this
+        runtime was built on. To serve a *rebuilt* index, build a new
+        ``ServerlessRuntime`` (``VectorSearchService.swap_index`` does).
+        """
+        self.index_version += 1
+        if self.result_cache is not None:
+            self.result_cache.invalidate()
+        for pool in (self.qa_pool, *self.qp_pools.values()):
+            pool.clear_derived()
 
     def qa_data_bytes(self) -> int:
         """QA singleton: attribute Q-index + centroids + P-V map."""
@@ -245,6 +286,8 @@ class _Execution:
         self.escalations = 0
         self.efs_reads = 0
         self.efs_read_bytes = 0
+        self.cache_hits = 0
+        self.cache_misses = 0
         self.out_ids = np.full((qn, k), -1, dtype=np.int64)
         self.out_dists = np.full((qn, k), np.inf, dtype=np.float64)
 
@@ -295,7 +338,8 @@ class _Execution:
             dre=self.dre, efs_reads=self.efs_reads,
             efs_read_bytes=self.efs_read_bytes, stats=self.stats,
             mem_qa_mb=self.cfg.mem_qa_mb, mem_qp_mb=self.cfg.mem_qp_mb,
-            mem_co_mb=self.cfg.mem_co_mb, prices=self.cfg.prices)
+            mem_co_mb=self.cfg.mem_co_mb, prices=self.cfg.prices,
+            cache_hits=self.cache_hits, cache_misses=self.cache_misses)
         return SearchResult(ids=self.out_ids, dists=self.out_dists,
                             stats=self.stats, trace=trace)
 
@@ -367,7 +411,32 @@ class _Execution:
         t0 = time.perf_counter()
         predicates = pl.predicates_from_json(creq["preds"])
         k = int(creq["k"])
-        qidx, queries = creq["qidx"], creq["queries"]
+        full_qidx = creq["qidx"]
+        qidx, queries = full_qidx, creq["queries"]
+
+        # §5.6 result-cache split (CO only): hits never enter the fan-out —
+        # the tree below sees only the miss slice. Lookup runs inside the
+        # measured window: the Coordinator pays for its own cache probes.
+        cache = self.rt.result_cache if kind == "co" else None
+        hit_entries: List[tuple] = []        # (global qidx, (ids, dists))
+        miss_keys: Dict[int, object] = {}    # global qidx → cache key
+        if cache is not None:
+            miss_rows = []
+            pp = cache.canonical_predicates(predicates)
+            for i in range(qidx.shape[0]):
+                ckey = (cache.query_key(queries[i]), pp, k)
+                entry = cache.get(ckey)
+                if entry is not None:
+                    hit_entries.append((int(qidx[i]), entry))
+                else:
+                    miss_rows.append(i)
+                    miss_keys[int(qidx[i])] = ckey
+            if hit_entries:
+                rows = np.asarray(miss_rows, dtype=np.int64)
+                qidx, queries = qidx[rows], queries[rows]
+            self.cache_hits += len(hit_entries)
+            self.cache_misses += len(miss_keys)
+
         olo, ohi = self._own_range(spec)
         own_mask = (qidx >= olo) & (qidx < ohi)
         own_qidx, own_q = qidx[own_mask], queries[own_mask]
@@ -381,7 +450,7 @@ class _Execution:
         self.stats.partitions_visited += plan.partitions_visited
         self.escalations += plan.escalations
 
-        gather = _Gather(qidx, k)
+        gather = _Gather(full_qidx, k)
         m_own = own_qidx.shape[0]
         own_streams: Dict[int, tuple] = {}
         own_gather = _Gather(own_qidx, k) if m_own else None
@@ -392,7 +461,18 @@ class _Execution:
                 streams = [own_streams[pid] for pid in sorted(own_streams)]
                 ids, dists = nd.merge_partition_topk(m_own, k, streams)
                 gather.scatter({"qidx": own_qidx, "ids": ids, "dists": dists})
-            resp = {"qidx": qidx, "ids": gather.ids, "dists": gather.dists}
+            if hit_entries:
+                gather.scatter({
+                    "qidx": np.asarray([q for q, _ in hit_entries], np.int32),
+                    "ids": np.stack([e[0] for _, e in hit_entries]),
+                    "dists": np.stack([e[1] for _, e in hit_entries])})
+            if miss_keys:
+                for gq, ckey in miss_keys.items():
+                    row = gather.pos[gq]
+                    cache.put(ckey, (gather.ids[row].copy(),
+                                     gather.dists[row].copy()))
+            resp = {"qidx": full_qidx, "ids": gather.ids,
+                    "dists": gather.dists}
             rbuf = pl.encode_message(resp)
             # Responses are budgeted too: under the chunk policy an
             # oversized response paginates — each extra page is a warm
@@ -407,8 +487,9 @@ class _Execution:
                 t_issue=t_issue, t_start=t_start, t_end=t_end,
                 invoke_s=inv, fetch_s=fetch_s, compute_s=compute_s,
                 request_bytes=req_bytes, response_bytes=len(rbuf),
-                warm=warm, dre_hit=hit, queries=int(qidx.shape[0]),
-                own_queries=m_own, response_chunks=n_pages))
+                warm=warm, dre_hit=hit, queries=int(full_qidx.shape[0]),
+                own_queries=m_own, response_chunks=n_pages,
+                cache_hits=len(hit_entries)))
             if lease is not None:
                 self.loop.at(t_end, lambda: self.rt.qa_pool.release(lease))
             self.loop.at(t_end + self._tx(len(rbuf)),
@@ -423,13 +504,17 @@ class _Execution:
         # own QP fan-out once Alg. 1 has produced the request payloads.
         # The primary chunk (ci == 0) launches every child — the whole-fleet
         # tree launch is the Fig. 7 artifact — but overflow chunks forward
-        # only to subtrees that actually hold some of their queries.
+        # only to subtrees that actually hold some of their queries, and a
+        # Coordinator whose batch was thinned by cache *hits* forwards only
+        # to subtrees that still hold misses (a fully-hit batch launches no
+        # tree at all). A cold cache (no hits) must reproduce the cache-off
+        # fleet exactly, so the skip is gated on hits, not on cache_enabled.
         seq_t = t_avail
         for i, ch_id in enumerate(spec.children):
             ch = self.rt.topology[ch_id]
             clo, chi = self._qrange(*ch.id_range(self.rt.n_qa))
             mask = (qidx >= clo) & (qidx < chi)
-            if ci > 0 and not mask.any():
+            if (ci > 0 or hit_entries) and not mask.any():
                 continue
             subreq = {"qidx": qidx[mask], "queries": queries[mask],
                       "preds": creq["preds"], "k": k}
@@ -508,7 +593,20 @@ class _Execution:
         t_start, respond_chunk,
     ) -> None:
         cfg = self.cfg
-        t_avail = t_start + lease.fetch_s
+        # Derived-state retention (DRE beyond the fetch): a container that
+        # already materialized this partition's device-resident slice skips
+        # the setup step; DRE-off pays it on every invocation. Keys embed
+        # the index version so invalidation makes retained state stale.
+        pool = self.rt.qp_pools[pid]
+        setup_s = cfg.qp_setup_s
+        if cfg.use_dre:
+            dkey = ("stacked", pid, self.rt.index_version)
+            if pool.derived_hit(lease, dkey):
+                setup_s = 0.0
+                self.dre.derived_hits += 1
+            else:
+                pool.retain_derived(lease, dkey)
+        t_avail = t_start + lease.fetch_s + setup_s
         t0 = time.perf_counter()
         resp, counters = self.rt.processor(pid).handle(creq)
         measured = time.perf_counter() - t0
@@ -537,7 +635,7 @@ class _Execution:
             warm=lease.warm, dre_hit=lease.dre_hit,
             queries=int(creq["qidx"].shape[0]),
             own_queries=int(creq["qidx"].shape[0]),
-            response_chunks=n_pages))
+            response_chunks=n_pages, setup_s=setup_s))
         self.loop.at(t_end, lambda: self.rt.qp_pools[pid].release(lease))
         self.loop.at(t_end + self._tx(len(rbuf)),
                      lambda: respond_chunk(resp))

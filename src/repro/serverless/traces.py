@@ -42,6 +42,8 @@ class NodeTrace:
     queries: int              # queries carried by this chunk's request
     own_queries: int = 0      # queries in the node's *own* slice (QA/QP work)
     response_chunks: int = 1  # >1 → response exceeded the cap and paginated
+    cache_hits: int = 0       # CO only: queries served from the §5.6 cache
+    setup_s: float = 0.0      # QP derived-state build (0 on a retained hit)
 
     @property
     def billed_s(self) -> float:
@@ -64,10 +66,17 @@ class RunTrace:
     stats: SearchStats
     fleet: Optional[LambdaFleet] = None
     cost: Optional[Dict] = None
+    cache_hits: int = 0       # queries served from the §5.6 result cache
+    cache_misses: int = 0     # queries that traversed the Alg. 2 tree
 
     @property
     def payload_bytes(self) -> int:
         return self.request_bytes + self.response_bytes
+
+    @property
+    def cache_hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
 
     def invocations(self, kind: Optional[str] = None) -> int:
         return sum(1 for n in self.nodes if kind is None or n.kind == kind)
@@ -86,6 +95,8 @@ def assemble_run_trace(
     mem_qp_mb: int,
     mem_co_mb: int,
     prices: PricingConstants,
+    cache_hits: int = 0,
+    cache_misses: int = 0,
 ) -> RunTrace:
     """Fold node traces into fleet inputs and the Eqs. 3–8 breakdown."""
     t_qa = sum(n.billed_s for n in nodes if n.kind == "qa")
@@ -116,4 +127,6 @@ def assemble_run_trace(
         stats=stats,
         fleet=fleet,
         cost=squash_query_cost(fleet, prices),
+        cache_hits=cache_hits,
+        cache_misses=cache_misses,
     )

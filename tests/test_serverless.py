@@ -98,6 +98,95 @@ def test_result_cache():
     assert cache.hit_rate == 0.5
 
 
+def test_result_cache_exact_keys_no_float_aliasing():
+    """Regression: the old key rounded coordinates to 6 decimals, so queries
+    differing at the 8th decimal aliased to one entry and the second query
+    silently got the first query's neighbors."""
+    cache = dre.ResultCache()
+    q1 = np.array([1.0, 2.0])
+    q2 = np.array([1.0, 2.00000001])       # differs at the 8th decimal
+    k1 = cache.key(q1, [], 10)
+    k2 = cache.key(q2, [], 10)
+    assert k1 != k2
+    cache.put(k1, "neighbors-of-q1")
+    assert cache.get(k2) is None, "distinct query must not hit q1's entry"
+    # dtype normalization: equal values hash equal regardless of input dtype
+    assert cache.key(np.array([1.0, 2.0], np.float32), [], 10) == k1
+
+
+def test_result_cache_key_canonicalizes_predicates():
+    from repro.core.attributes import Predicate
+
+    q = np.array([0.5])
+    a = Predicate(attr=0, op="<", lo=3.0)
+    b = Predicate(attr=1, op="IN", values=(2.0, 1.0))
+    b_sorted = Predicate(attr=1, op="IN", values=(1.0, 2.0))
+    cache = dre.ResultCache()
+    # predicate order and IN value order are spelling, not semantics
+    assert cache.key(q, [a, b], 10) == cache.key(q, [b_sorted, a], 10)
+    # different k, different operand, different group → different keys
+    assert cache.key(q, [a, b], 10) != cache.key(q, [a, b], 11)
+    assert cache.key(q, [a], 10) != cache.key(
+        q, [Predicate(attr=0, op="<", lo=3.1)], 10)
+    grouped = Predicate(attr=0, op="<", lo=3.0, group=1)
+    assert cache.key(q, [a], 10) != cache.key(q, [grouped], 10)
+
+
+def test_result_cache_lru_get_refreshes_recency():
+    """Regression: eviction used to pop insertion order with no refresh on
+    get — a hot entry inserted first was evicted before a stale one."""
+    cache = dre.ResultCache(capacity=2)
+    cache.put("hot", 1)
+    cache.put("stale", 2)
+    assert cache.get("hot") == 1           # refresh: hot is now most recent
+    cache.put("new", 3)                    # evicts 'stale', not 'hot'
+    assert cache.get("hot") == 1
+    assert cache.get("stale") is None
+    assert cache.get("new") == 3
+    assert cache.evictions == 1
+
+
+def test_result_cache_byte_budget_accounting():
+    row = np.zeros(128)                    # 1 KiB of float64 payload
+    cache = dre.ResultCache(max_bytes=4096)
+    for i in range(8):
+        cache.put(("q", i), row.copy())
+    assert cache.current_bytes <= 4096
+    assert len(cache) < 8 and cache.evictions > 0
+    # an entry larger than the whole budget is never admitted
+    cache.put(("huge",), np.zeros(4096))
+    assert ("huge",) not in cache
+    cache.invalidate()
+    assert len(cache) == 0 and cache.current_bytes == 0
+
+
+def test_container_pool_dre_off_does_not_seed_retention():
+    """Regression (off→on sequence): a DRE-off invocation used to install
+    the singleton anyway, so a later DRE-on call scored a hit it never paid
+    for."""
+    pool = dre.ContainerPool(warm_prob=1.0, seed=0)
+    pool.invoke("sift1m/part0", 1000, use_dre=False)
+    warm, hit = pool.invoke("sift1m/part0", 1000, use_dre=True)
+    assert warm and not hit, "first DRE-on call must pay the fetch"
+    warm, hit = pool.invoke("sift1m/part0", 1000, use_dre=True)
+    assert hit, "second DRE-on call hits the retention it paid for"
+    assert pool.stats.s3_gets == 2
+
+
+def test_container_pool_derived_state_retention():
+    pool = dre.ContainerPool(warm_prob=1.0, seed=0)
+    lease = pool.acquire("ds/p0", 1000)
+    assert not pool.derived_hit(lease, ("stacked", 0))
+    pool.retain_derived(lease, ("stacked", 0))
+    pool.release(lease)
+    lease2 = pool.acquire("ds/p0", 1000)
+    assert lease2.container_id == lease.container_id
+    assert pool.derived_hit(lease2, ("stacked", 0))
+    assert not pool.derived_hit(lease2, ("stacked", 1)), "key-specific"
+    assert not pool.derived_hit(lease2, ("stacked", 0), use_dre=False)
+    assert pool.stats.derived_hits == 1
+
+
 # ----------------------------------------------------------------- cost model
 
 def test_cost_model_components():
@@ -371,3 +460,164 @@ def test_service_serverless_backend(built):
     assert svc.last_trace is not None
     assert svc.last_trace.cost["total"] > 0
     assert svc.queries_served["serverless"] == ds.queries.shape[0]
+
+
+# ============================================== §5.6 result cache in the runtime
+
+
+def test_cache_on_off_bitwise_parity_repeated_batches(built):
+    """Acceptance: with caching enabled, repeated-workload ids/dists are
+    bitwise-identical to a cache-off run, while the repeat pass shows
+    strictly fewer invocations, payload bytes and §3.5 dollars."""
+    ds, preds, index = built
+    off = _runtime(index)
+    on = _runtime(index, cache_enabled=True)
+    off1 = off.search(ds.queries, preds, k=10)
+    off2 = off.search(ds.queries, preds, k=10)
+    on1 = on.search(ds.queries, preds, k=10)
+    on2 = on.search(ds.queries, preds, k=10)
+    for a, b in ((off1, on1), (off2, on2)):
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_array_equal(a.dists, b.dists)
+    # cold pass: every query misses, then populates
+    assert on1.trace.cache_hits == 0
+    assert on1.trace.cache_misses == ds.queries.shape[0]
+    # repeat pass: all served at the CO, fleet never launches
+    assert on2.trace.cache_hits == ds.queries.shape[0]
+    assert on2.trace.cache_misses == 0
+    assert on2.trace.invocations() < off2.trace.invocations()
+    assert on2.trace.invocations("qa") == 0
+    assert on2.trace.invocations("qp") == 0
+    assert on2.trace.payload_bytes < off2.trace.payload_bytes
+    assert on2.trace.cost["total"] < off2.trace.cost["total"]
+    assert on2.trace.cache_hit_rate == 1.0
+    # the CO's own trace marks the served queries
+    co = [n for n in on2.trace.nodes if n.kind == "co"]
+    assert sum(n.cache_hits for n in co) == ds.queries.shape[0]
+
+
+def test_cache_cold_pass_fleet_matches_cache_off(built):
+    """A cold cache (0 hits) must not change the modeled fleet: only *hits*
+    may thin the Fig. 7 whole-fleet launch, so a small batch that leaves
+    some subtrees query-empty still launches them, exactly like cache-off."""
+    ds, preds, index = built
+    off = _runtime(index, branching=4, max_level=2)
+    on = _runtime(index, branching=4, max_level=2, cache_enabled=True)
+    r_off = off.search(ds.queries[:2], preds, k=10)
+    r_on = on.search(ds.queries[:2], preds, k=10)
+    assert r_on.trace.invocations() == r_off.trace.invocations()
+    assert r_on.trace.invocations("qa") == r_off.trace.invocations("qa")
+    np.testing.assert_array_equal(r_on.ids, r_off.ids)
+
+
+def test_cache_mixed_hit_miss_slices(built):
+    """Partially-repeated batch: the hit slice never reaches the fleet, the
+    miss slice traverses the tree, and the merged result is bitwise equal
+    to a cache-off run of the same batch."""
+    ds, preds, index = built
+    half = ds.queries.shape[0] // 2
+    mixed = np.concatenate([ds.queries[:half], ds.queries[:half] + 0.25])
+    off = _runtime(index)
+    on = _runtime(index, cache_enabled=True)
+    on.search(ds.queries[:half], preds, k=10)        # populate first half
+    r_on = on.search(mixed, preds, k=10)
+    r_off = off.search(mixed, preds, k=10)
+    np.testing.assert_array_equal(r_on.ids, r_off.ids)
+    np.testing.assert_array_equal(r_on.dists, r_off.dists)
+    assert r_on.trace.cache_hits == half
+    assert r_on.trace.cache_misses == half
+    assert 0.0 < r_on.trace.cache_hit_rate < 1.0
+    assert r_on.trace.invocations("qp") <= r_off.trace.invocations("qp")
+    assert r_on.trace.payload_bytes < r_off.trace.payload_bytes
+    # different k must not hit entries stored under k=10
+    r_k5 = on.search(mixed[:2], preds, k=5)
+    assert r_k5.trace.cache_hits == 0
+
+
+def test_cache_respects_predicates(built):
+    """Same query under a different filter is a different result — the
+    canonical predicate tuple must keep them apart, while a reordered
+    spelling of the same filter still hits."""
+    ds, preds, index = built
+    if len(preds) < 2:
+        pytest.skip("needs >= 2 predicates to reorder")
+    on = _runtime(index, cache_enabled=True)
+    on.search(ds.queries[:4], preds, k=10)
+    r_reordered = on.search(ds.queries[:4], list(reversed(preds)), k=10)
+    assert r_reordered.trace.cache_hits == 4
+    r_unfiltered = on.search(ds.queries[:4], [], k=10)
+    assert r_unfiltered.trace.cache_hits == 0
+    ids_j, _, _ = index.search(ds.queries[:4], [], k=10, backend="jax")
+    np.testing.assert_array_equal(r_unfiltered.ids, ids_j)
+
+
+def test_cache_invalidation_serves_fresh_results(built):
+    ds, preds, index = built
+    on = _runtime(index, cache_enabled=True)
+    on.search(ds.queries, preds, k=10)
+    on.invalidate_cache()
+    r = on.search(ds.queries, preds, k=10)
+    assert r.trace.cache_hits == 0 and r.trace.cache_misses == ds.queries.shape[0]
+    ids_j, _, _ = index.search(ds.queries, preds, k=10, backend="jax")
+    np.testing.assert_array_equal(r.ids, ids_j)
+
+
+def test_qp_derived_state_retention_in_runtime(built):
+    """Warm QP containers retain derived (device-resident) state beyond the
+    fetched bytes: the first wave pays setup on every QP invocation, the
+    second wave skips it on retained containers; DRE-off always pays."""
+    ds, preds, index = built
+    rt = _runtime(index, warm_prob=1.0)
+    r1 = rt.search(ds.queries, preds, k=10)
+    r2 = rt.search(ds.queries, preds, k=10)
+    assert r1.trace.dre.derived_hits == 0
+    assert r2.trace.dre.derived_hits == r2.trace.invocations("qp") > 0
+    qp1 = [n for n in r1.trace.nodes if n.kind == "qp"]
+    qp2 = [n for n in r2.trace.nodes if n.kind == "qp"]
+    assert all(n.setup_s > 0 for n in qp1)
+    assert all(n.setup_s == 0 for n in qp2)
+    off = _runtime(index, warm_prob=1.0, use_dre=False)
+    off.search(ds.queries, preds, k=10)
+    r_off = off.search(ds.queries, preds, k=10)
+    assert r_off.trace.dre.derived_hits == 0
+    assert all(n.setup_s > 0 for n in r_off.trace.nodes if n.kind == "qp")
+
+
+def test_service_cache_config_and_invalidation_on_rebuild(built):
+    """Service-level wiring: ServiceConfig(cache_enabled=True) reaches the
+    runtime, and swap_index invalidates so a rebuilt index can never serve
+    stale cached neighbors."""
+    from repro.serve.vector_service import ServiceConfig, VectorSearchService
+
+    ds, preds, index = built
+    svc = VectorSearchService(index, ServiceConfig(
+        backend="serverless", cache_enabled=True))
+    svc.query(ds.queries, preds, k=10)
+    ids_a, _, _ = svc.query(ds.queries, preds, k=10)
+    assert svc.last_trace.cache_hits == ds.queries.shape[0]
+    assert svc.result_cache is not None and svc.result_cache.hits > 0
+
+    # rebuild the index on perturbed vectors → same queries, new neighbors
+    cfg = SquashConfig(num_partitions=5, kmeans_iters=4, lloyd_iters=6)
+    rebuilt = SquashIndex.build(ds.vectors[::-1].copy(), ds.attributes,
+                                cfg, seed=11)
+    svc.swap_index(rebuilt)
+    ids_b, _, _ = svc.query(ds.queries, preds, k=10)
+    assert svc.last_trace.cache_hits == 0, "stale cache served after rebuild"
+    ids_j, _, _ = rebuilt.search(ds.queries, preds, k=10, backend="jax")
+    np.testing.assert_array_equal(ids_b, ids_j)
+
+
+def test_cache_with_payload_chunking(built):
+    """Cache split composes with the chunk overflow policy: a chunked CO
+    request still serves hits per chunk and stays bitwise-correct."""
+    ds, preds, index = built
+    on = _runtime(index, cache_enabled=True, max_payload_bytes=4096,
+                  overflow="chunk")
+    r1 = on.search(ds.queries, preds, k=10)
+    r2 = on.search(ds.queries, preds, k=10)
+    ids_j, _, _ = index.search(ds.queries, preds, k=10, backend="jax")
+    np.testing.assert_array_equal(r1.ids, ids_j)
+    np.testing.assert_array_equal(r2.ids, ids_j)
+    assert r2.trace.cache_hits == ds.queries.shape[0]
+    assert r2.trace.invocations("qp") == 0
