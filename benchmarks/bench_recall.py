@@ -4,7 +4,10 @@ Builds the full SQUASH index on the synthetic stand-ins (paper Table 2
 shapes, N scaled for CPU), generates A = 4 uniform attributes with ~8 % joint
 selectivity (§5.1), and measures filtered recall@10 against exact brute
 force. Also demonstrates the "> 99 % if configured to do so" claim with a
-higher-H_perc / higher-R configuration.
+higher-H_perc / higher-R configuration, and the recall-targeted Hamming
+autotune (core/autotune.py): the calibrated per-partition keep profile must
+hold the paper configuration's recall while evaluating strictly fewer ADC
+candidates than the static H_perc = 10 knob.
 """
 
 from __future__ import annotations
@@ -18,9 +21,11 @@ from repro.data.synthetic import (default_predicates, ground_truth,
 
 PAPER_T = {"sift1m": 1.15, "gist1m": 1.2, "sift10m": 1.15, "deep10m": 1.13}
 
+RECALL_TARGET = 0.95
+
 
 def run(quick: bool = True) -> dict:
-    header("§5.3 — recall calibration (target ≥ 0.97 @ k=10)")
+    header("§5.3 — recall calibration (target ≥ 0.97 @ k=10) + autotune")
     rows = []
     presets = ["sift1m", "gist1m"] if quick else list(PAPER_T)
     for preset in presets:
@@ -44,15 +49,51 @@ def run(quick: bool = True) -> dict:
             rec = recall_at_k(ids, gt_ids)
             rows.append({"dataset": preset, "config": label, "recall": rec,
                          "queries": nq, "seconds": secs,
+                         "adc_evals": stats.adc_evals,
                          "partitions_visited": stats.partitions_visited / nq,
                          "hamming_kept_frac":
                              stats.hamming_kept / max(stats.hamming_in, 1)})
             print(f"  {preset:8s} {label:22s} recall@10={rec:.3f} "
-                  f"({secs:.2f}s, {stats.partitions_visited / nq:.1f} parts/q)")
+                  f"({secs:.2f}s, {stats.partitions_visited / nq:.1f} parts/q,"
+                  f" {stats.adc_evals} ADC)")
+            if label.startswith("paper"):
+                # Recall-targeted autotune on the same build: per-partition
+                # keep fractions + calibrated floor instead of the one knob.
+                profile = idx.autotune(recall_target=RECALL_TARGET, k=10,
+                                       sample=64, seed=0)
+                (ids_t, _, stats_t), secs_t = timed(
+                    idx.search, ds.queries, preds, 10, repeats=1)
+                rec_t = recall_at_k(ids_t, gt_ids)
+                rows.append({
+                    "dataset": preset, "config": "autotuned", "recall": rec_t,
+                    "queries": nq, "seconds": secs_t,
+                    "adc_evals": stats_t.adc_evals,
+                    "partitions_visited": stats_t.partitions_visited / nq,
+                    "hamming_kept_frac":
+                        stats_t.hamming_kept / max(stats_t.hamming_in, 1),
+                    "keep_frac": [float(x) for x in profile.keep_frac],
+                    "min_keep": profile.min_keep,
+                    "adc_savings":
+                        1.0 - stats_t.adc_evals / max(stats.adc_evals, 1),
+                })
+                print(f"  {preset:8s} {'autotuned':22s} recall@10={rec_t:.3f}"
+                      f" ({secs_t:.2f}s, {stats_t.adc_evals} ADC, "
+                      f"{1 - stats_t.adc_evals / max(stats.adc_evals, 1):.0%}"
+                      f" fewer)")
+                idx.set_profile(None)
     save_json("bench_recall", {"rows": rows})
     paper_rows = [r for r in rows if r["config"].startswith("paper")]
     assert all(r["recall"] >= 0.95 for r in paper_rows), \
         "paper configuration must reach ≥0.95 recall on the stand-ins"
+    for preset in presets:
+        static = next(r for r in rows if r["dataset"] == preset
+                      and r["config"].startswith("paper"))
+        tuned = next(r for r in rows if r["dataset"] == preset
+                     and r["config"] == "autotuned")
+        assert tuned["recall"] >= RECALL_TARGET, \
+            f"{preset}: autotuned recall {tuned['recall']} below target"
+        assert tuned["adc_evals"] < static["adc_evals"], \
+            f"{preset}: autotune must evaluate strictly fewer ADC candidates"
     return {"rows": rows}
 
 

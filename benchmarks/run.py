@@ -6,9 +6,10 @@
 Paper-artifact map (DESIGN.md §6):
   Fig. 2  → bench_compression     Fig. 6  → bench_dre
   Fig. 8  → bench_cost            Fig. 9  → bench_qps
-  Fig. 10 → bench_scaling         Table 3 → bench_caching
+  Fig. 10 → bench_scaling         §5.3    → bench_recall (+ autotune)
   Alg. 2  → bench_invocation      kernels → bench_kernels
-  §5.6    → bench_cache (runtime result cache, Zipf workload)
+  §5.6 + Table 3 → bench_cache (the one cache bench: runtime result
+              cache on a Zipf workload + the Table 3 cache-ratio study)
   §Roofline → roofline (subprocess: needs 512 XLA host devices before
               jax init, so it cannot share this interpreter)
 """
@@ -54,18 +55,21 @@ def smoke() -> int:
     idx = SquashIndex.build(ds.vectors, ds.attributes, cfg, seed=7)
     gt_ids, _ = synthetic.ground_truth(ds, preds, k=10)
 
+    def recall_of(ids):
+        per_q = []
+        for qi in range(ds.queries.shape[0]):
+            g = set(gt_ids[qi][gt_ids[qi] >= 0].tolist())
+            if g:
+                per_q.append(len(g & set(ids[qi].tolist())) / len(g))
+        return float(np.mean(per_q))
+
     recalls = {}
     results = {}
     for backend in ("numpy", "jax"):
         ids, dists, stats = idx.search(ds.queries, preds, k=10,
                                        backend=backend)
         results[backend] = (ids, dists, stats)
-        per_q = []
-        for qi in range(ds.queries.shape[0]):
-            g = set(gt_ids[qi][gt_ids[qi] >= 0].tolist())
-            if g:
-                per_q.append(len(g & set(ids[qi].tolist())) / len(g))
-        recalls[backend] = float(np.mean(per_q))
+        recalls[backend] = recall_of(ids)
     ids_n, _, stats_n = results["numpy"]
     ids_j, _, stats_j = results["jax"]
     assert np.array_equal(ids_n, ids_j), "backend ids diverged"
@@ -108,12 +112,33 @@ def smoke() -> int:
     assert t2.payload_bytes < tr.payload_bytes
     assert t2.cost["total"] < tr.cost["total"]
 
+    # Recall-targeted autotune gate: the calibrated per-partition profile
+    # must hold recall at-or-above the static configuration's while
+    # evaluating strictly fewer ADC candidates, with all three backends
+    # still bitwise-identical under the same profile.
+    static_recall = recalls["numpy"]
+    static_adc = stats_n.adc_evals
+    idx.autotune(recall_target=0.95, k=10, sample=48, seed=7)
+    ids_tn, _, st_tn = idx.search(ds.queries, preds, k=10, backend="numpy")
+    ids_tj, _, st_tj = idx.search(ds.queries, preds, k=10, backend="jax")
+    assert np.array_equal(ids_tn, ids_tj), "autotuned backend ids diverged"
+    assert st_tn == st_tj, f"autotuned stats drift: {st_tn} vs {st_tj}"
+    rt_t = ServerlessRuntime(idx, RuntimeConfig(branching=3, max_level=2))
+    res_t = rt_t.search(ds.queries, preds, k=10)
+    assert np.array_equal(res_t.ids, ids_tj), "autotuned serverless diverged"
+    tuned_recall = recall_of(ids_tn)
+    assert tuned_recall >= min(0.95, static_recall), (
+        f"autotuned recall {tuned_recall:.3f} fell below gate")
+    assert st_tn.adc_evals < static_adc, (
+        f"autotune must prune more: {st_tn.adc_evals} vs {static_adc}")
+
     print(f"[smoke] OK in {time.time() - t0:.1f}s — recall@10="
           f"{recalls['jax']:.3f}, ids identical across numpy/jax/serverless"
           f" (±cache); runtime: {tr.invocations('qa')} QA + "
           f"{tr.invocations('qp')} QP, ${tr.cost['total']:.6f}/batch; "
           f"cached repeat: {len(t2.nodes)} invocation(s), "
-          f"${t2.cost['total']:.6f}/batch")
+          f"${t2.cost['total']:.6f}/batch; autotuned: recall@10="
+          f"{tuned_recall:.3f} at {st_tn.adc_evals}/{static_adc} ADC evals")
     return 0
 
 
@@ -132,21 +157,21 @@ def main(argv=None) -> int:
     quick = not args.full
 
     from benchmarks import (bench_ablations, bench_baselines, bench_cache,
-                            bench_caching, bench_compression, bench_cost,
-                            bench_dre, bench_invocation, bench_kernels,
-                            bench_kv_quant, bench_qps, bench_recall,
-                            bench_scaling)
+                            bench_compression, bench_cost, bench_dre,
+                            bench_invocation, bench_kernels, bench_kv_quant,
+                            bench_qps, bench_recall, bench_scaling)
     suite = {
         "compression": bench_compression,
         "invocation": bench_invocation,
         "dre": bench_dre,
+        # The one cache bench: §5.6 Zipf workload + Table 3 cache ratios
+        # (the seed's separate bench_caching is folded into bench_cache).
         "cache": bench_cache,
         "cost": bench_cost,
         "kernels": bench_kernels,
         "recall": bench_recall,
         "qps": bench_qps,
         "scaling": bench_scaling,
-        "caching": bench_caching,
         "baselines": bench_baselines,
         "ablations": bench_ablations,
         "kv_quant": bench_kv_quant,

@@ -270,36 +270,44 @@ def build_cand_arrays(
     return cand_mask, n_cand
 
 
-def stage_counts(n_cand: np.ndarray, config, k: int
+def stage_counts(n_cand: np.ndarray, config, k: int, profile=None
                  ) -> Tuple[np.ndarray, np.ndarray]:
     """Per-(query, partition) Hamming-keep and refine-take counts.
 
     Elementwise twin of the NumPy reference's data-dependent formulas in
-    ``SquashIndex._search_partition`` (zero where no candidates).
+    ``SquashIndex._search_partition`` (zero where no candidates). With a
+    :class:`~repro.core.autotune.CalibrationProfile` the keep fraction is
+    per-partition (broadcast over the partition axis) and the floor is the
+    profile's calibrated ``min_keep``; otherwise the static config knobs.
     """
-    n = n_cand.astype(np.int64)
-    keep = np.maximum(
-        np.minimum(config.min_hamming_keep, n),
-        np.ceil(n * config.hamming_perc / 100.0).astype(np.int64),
-    )
-    keep = np.minimum(keep, n)
+    from repro.core import autotune
+
+    frac = autotune.keep_fracs(config, profile, n_cand.shape[1])
+    floor = autotune.keep_floor(config, profile)
+    keep = autotune.keep_counts(n_cand, frac[None, :], floor)
     cap = int(np.ceil(config.refine_ratio * k)) if config.enable_refine else k
     take = np.minimum(cap, keep)
     return keep.astype(np.int32), take.astype(np.int32)
 
 
-def static_counts(n_max: int, config, k: int) -> Tuple[int, int]:
+def static_counts(n_max: int, config, k: int, profile=None
+                  ) -> Tuple[int, int]:
     """Static upper bounds for keep/take (the fixed ``top_k`` sizes).
 
     Both per-pair formulas are monotone in the candidate count, so their
-    value at ``n_max`` bounds every (query, partition) pair.
+    value at ``n_max`` — under the *largest* per-partition keep fraction —
+    bounds every (query, partition) pair.
     """
+    from repro.core import autotune
+
     n = max(int(n_max), 1)
-    keep_s = max(
-        min(config.min_hamming_keep, n),
-        int(np.ceil(n * config.hamming_perc / 100.0)),
-    )
-    keep_s = max(min(keep_s, n), 1)
+    if profile is None:
+        frac = float(config.hamming_perc)
+        floor = int(config.min_hamming_keep)
+    else:
+        frac = float(np.max(profile.keep_frac))
+        floor = int(profile.min_keep)
+    keep_s = max(int(autotune.keep_count(n, frac, floor)), 1)
     cap = int(np.ceil(config.refine_ratio * k)) if config.enable_refine else k
     take_s = max(min(cap, keep_s), 1)
     return keep_s, take_s

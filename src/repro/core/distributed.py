@@ -145,8 +145,9 @@ def distributed_search(
 
     # Dense per-(query, partition) payloads: mask + dynamic stage counts.
     cand_mask, n_cand = dataplane.build_cand_arrays(cands, qn, p, n_max)
-    keep, take = dataplane.stage_counts(n_cand, cfg, k)
-    keep_s, take_s = dataplane.static_counts(n_max, cfg, k)
+    profile = getattr(index, "profile", None)
+    keep, take = dataplane.stage_counts(n_cand, cfg, k, profile)
+    keep_s, take_s = dataplane.static_counts(n_max, cfg, k, profile)
 
     data_size = int(np.prod([mesh.shape[a] for a in data_axes]))
     pad_q = -(-qn // data_size) * data_size

@@ -47,7 +47,9 @@ class SquashConfig:
     bits_per_dim: float = 4.0          # bit budget b = bits_per_dim * d
     segment_bits: int = 8              # S
     use_klt: bool = True               # unitary decorrelating transform
-    hamming_perc: float = 10.0         # H_perc — % of candidates kept
+    hamming_perc: float = 10.0         # H_perc — % of candidates kept (static;
+                                       # superseded per-partition by an
+                                       # installed autotune CalibrationProfile)
     refine_ratio: float = 2.0          # R — full-precision re-rank multiplier
     beta: float = 0.001                # Eq. 1 β
     threshold_override: Optional[float] = None
@@ -118,6 +120,10 @@ class SquashIndex:
         self.parts = parts
         self.attr_index = attr_index
         self.dim = dim
+        # Optional recall-targeted calibration (core/autotune.py): when set,
+        # per-partition keep fractions + a calibrated floor replace the
+        # static hamming_perc / min_hamming_keep in every data plane.
+        self.profile = None
         # jax-backend caches: stacked device payload per dtype, jitted plane
         # per (k, keep_s, take_s, refine). jit itself caches per (Q, d) shape,
         # so each (Q, k, index shape) traces exactly once (see
@@ -125,6 +131,31 @@ class SquashIndex:
         self._stacked_cache: Dict = {}
         self._plane_cache: Dict = {}
         self._trace_counter = [0]
+
+    def set_profile(self, profile) -> None:
+        """Install (or clear) a calibration profile for this index.
+
+        ``profile`` is a :class:`repro.core.autotune.CalibrationProfile`
+        whose partition count must match; ``None`` restores the static
+        config knobs. The jitted-plane cache is dropped because the static
+        keep/take shapes derive from the active profile.
+        """
+        if profile is not None and profile.num_partitions != len(self.parts):
+            raise ValueError(
+                f"profile covers {profile.num_partitions} partitions, index "
+                f"has {len(self.parts)}")
+        self.profile = profile
+        self._plane_cache.clear()
+
+    def autotune(self, queries=None, *, recall_target: float = 0.95,
+                 k: int = 10, sample: int = 64, seed: int = 0, **kw):
+        """Calibrate + install a recall-targeted profile; returns it."""
+        from repro.core import autotune as at
+
+        profile = at.calibrate(self, queries, recall_target=recall_target,
+                               k=k, sample=sample, seed=seed, **kw)
+        self.set_profile(profile)
+        return profile
 
     # ------------------------------------------------------------------ build
 
@@ -255,7 +286,8 @@ class SquashIndex:
             heap: List[Tuple[float, int]] = []
             for pid in sorted(cands[qi]):
                 ids, dists = self._search_partition(
-                    self.parts[pid], queries[qi], cands[qi][pid], k, stats
+                    self.parts[pid], pid, queries[qi], cands[qi][pid], k,
+                    stats
                 )
                 heap.extend(zip(dists.tolist(), ids.tolist()))
             # Single-pass MPI-style reduce: merge per-partition local top-k.
@@ -295,8 +327,8 @@ class SquashIndex:
         p, n_max = stacked.num_partitions, stacked.n_max
 
         cand_mask, n_cand = dataplane.build_cand_arrays(cands, qn, p, n_max)
-        keep, take = dataplane.stage_counts(n_cand, cfg, k)
-        keep_s, take_s = dataplane.static_counts(n_max, cfg, k)
+        keep, take = dataplane.stage_counts(n_cand, cfg, k, self.profile)
+        keep_s, take_s = dataplane.static_counts(n_max, cfg, k, self.profile)
 
         # Bucket Q to the next power of two so a service seeing naturally
         # varying batch sizes pays O(log Q) traces, not one per size. Padded
@@ -332,11 +364,14 @@ class SquashIndex:
     def _search_partition(
         self,
         part: PartitionIndex,
+        pid: int,
         query: np.ndarray,
         local_rows: np.ndarray,
         k: int,
         stats: SearchStats,
     ) -> Tuple[np.ndarray, np.ndarray]:
+        from repro.core import autotune
+
         cfg = self.config
         qt = part.transform(query)
 
@@ -347,11 +382,15 @@ class SquashIndex:
         x = np.bitwise_xor(cand_packed, qbits[None, :])
         ham = _popcount_u32(x).sum(axis=1)
         stats.hamming_in += local_rows.size
-        keep = max(
-            min(cfg.min_hamming_keep, local_rows.size),
-            int(np.ceil(local_rows.size * cfg.hamming_perc / 100.0)),
-        )
-        keep = min(keep, local_rows.size)
+        # Keep budget: the partition's calibrated fraction + global floor
+        # under an active profile, the static config knobs otherwise — the
+        # same keep_count formula stage_counts applies in the batched plane.
+        if self.profile is not None:
+            frac = float(self.profile.keep_frac[pid])
+            floor = int(self.profile.min_keep)
+        else:
+            frac, floor = cfg.hamming_perc, cfg.min_hamming_keep
+        keep = autotune.keep_count(local_rows.size, frac, floor)
         # Total-order composite key (ham, row): keeps the O(n) argpartition
         # while resolving ties by ascending row — the order the jax plane's
         # lax.top_k produces, required for backend id parity.

@@ -34,6 +34,7 @@ from repro.models import attention as A
 from repro.models import layers as L
 from repro.models import moe as M
 from repro.models import ssm as S
+from repro.models.hints import hint
 
 __all__ = ["init_params", "forward_train", "prefill", "decode_step",
            "init_decode_caches", "make_positions", "vlm_positions_3d"]
@@ -301,11 +302,19 @@ def _embed_inputs(params, tokens, cfg: ArchConfig, embeds=None):
         # tokens: (B, K, S)
         embs = jax.vmap(L.embed, in_axes=(0, 1), out_axes=2)(
             params["cb_embed"], tokens)                  # (B, S, K, d)
-        return embs.sum(axis=2)
+        return hint(embs.sum(axis=2), "data", None, None)
     x = L.embed(params["embed"], tokens)                 # (B, S, d)
     if cfg.mrope and embeds is not None:
         x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
-    return x
+    # Pin the embed output to batch-over-`data` before it reaches any block
+    # scan: left to GSPMD, the vocab-sharded embedding gather feeding a
+    # lax.scan over stacked MLA blocks miscompiles on host-device meshes
+    # (mean |Δ|≈0.4 — repro pinned in
+    # test_sharded_mla_scan_after_embed_repro). The constraint is the
+    # sharding batch_shardings assigns activations anyway and a no-op
+    # without an ambient mesh; applied here so train, prefill and decode
+    # all get it.
+    return hint(x, "data", None, None)
 
 
 def _lm_logits(params, x, cfg: ArchConfig):

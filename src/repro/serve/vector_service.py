@@ -19,6 +19,12 @@ The service also plays the QueryAllocator's accounting role: it accumulates
 :class:`~repro.core.pipeline.SearchStats` across requests and tracks wall
 time per backend, which ``benchmarks/bench_qps.py`` reads for the
 numpy-vs-jax shootout.
+
+With ``ServiceConfig(recall_target=…)`` the service additionally runs the
+recall-targeted Hamming autotune (``core/autotune.py``) against the bound
+index at bind time and again on every ``swap_index`` — per-partition keep
+budgets replace the static ``hamming_perc`` in all backends, ids staying
+bitwise-identical across them.
 """
 
 from __future__ import annotations
@@ -51,6 +57,14 @@ class ServiceConfig:
     # without hand-building a runtime config.
     cache_enabled: bool = False
     result_cache_bytes: int = 64 * 1024 * 1024
+    # Recall-targeted Hamming autotune (core/autotune.py). When set, the
+    # service calibrates a per-partition keep-budget profile against the
+    # bound index (and re-calibrates on ``swap_index``); every backend —
+    # numpy, jax, serverless — then consumes the same profile, so ids stay
+    # bitwise-identical across them at strictly fewer ADC evaluations.
+    recall_target: Optional[float] = None
+    calibration_sample: int = 64
+    calibration_seed: int = 0
 
 
 class VectorSearchService:
@@ -67,6 +81,22 @@ class VectorSearchService:
         self.queries_served: Dict[str, int] = {b: 0 for b in _CALL_BACKENDS}
         self._runtime = None
         self.last_trace = None         # RunTrace of the last serverless call
+        self._calibrate()
+
+    def _calibrate(self) -> None:
+        """(Re)derive the autotune profile for the currently-bound index."""
+        if self.config.recall_target is None:
+            return
+        self.index.autotune(
+            recall_target=self.config.recall_target,
+            k=self.config.default_k,
+            sample=self.config.calibration_sample,
+            seed=self.config.calibration_seed)
+
+    @property
+    def profile(self):
+        """The bound index's active CalibrationProfile (None if untuned)."""
+        return self.index.profile
 
     def resolve_backend(self, num_queries: int) -> str:
         if self.config.backend != "auto":
@@ -101,6 +131,7 @@ class VectorSearchService:
         """
         self.index = index
         self._runtime = None
+        self._calibrate()
 
     def warmup(self, num_queries: int, k: Optional[int] = None) -> None:
         """Pre-trace the jax plane for a batch shape (DRE-style warm start)."""

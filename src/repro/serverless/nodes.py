@@ -96,7 +96,11 @@ class QueryAllocator:
             escalations=esc_box)
         p, n_max = len(idx.parts), max(pt.size for pt in idx.parts)
         _, n_cand = dataplane.build_cand_arrays(cands, m, p, n_max)
-        keep, take = dataplane.stage_counts(n_cand, idx.config, k)
+        # Per-partition budgets: under a calibration profile each partition
+        # gets its own keep fraction (core/autotune.py); the derived keep /
+        # take vectors ship to the QPs inside the Alg. 2 request payloads.
+        keep, take = dataplane.stage_counts(n_cand, idx.config, k,
+                                            getattr(idx, "profile", None))
 
         qp_requests: Dict[int, Dict] = {}
         for pid in range(p):

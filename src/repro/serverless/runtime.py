@@ -207,7 +207,8 @@ class ServerlessRuntime:
 
     def _plane_for(self, k: int):
         cfg = self.index.config
-        keep_s, take_s = dataplane.static_counts(self.stacked.n_max, cfg, k)
+        keep_s, take_s = dataplane.static_counts(
+            self.stacked.n_max, cfg, k, getattr(self.index, "profile", None))
         key = (k, keep_s, take_s, cfg.enable_refine)
         plane = self._planes.get(key)
         if plane is None:
@@ -635,7 +636,10 @@ class _Execution:
             warm=lease.warm, dre_hit=lease.dre_hit,
             queries=int(creq["qidx"].shape[0]),
             own_queries=int(creq["qidx"].shape[0]),
-            response_chunks=n_pages, setup_s=setup_s))
+            response_chunks=n_pages, setup_s=setup_s,
+            hamming_in=counters["hamming_in"],
+            hamming_kept=counters["hamming_kept"],
+            adc_evals=counters["adc_evals"]))
         self.loop.at(t_end, lambda: self.rt.qp_pools[pid].release(lease))
         self.loop.at(t_end + self._tx(len(rbuf)),
                      lambda: respond_chunk(resp))

@@ -44,6 +44,13 @@ class NodeTrace:
     response_chunks: int = 1  # >1 → response exceeded the cap and paginated
     cache_hits: int = 0       # CO only: queries served from the §5.6 cache
     setup_s: float = 0.0      # QP derived-state build (0 on a retained hit)
+    # QP pruning accounting (0 for CO/QA nodes): candidates entering the
+    # Hamming stage, survivors of it, and ADC table evaluations — the knob
+    # the autotune profile turns, so the §3.5 cost fold can attribute
+    # GB-second savings to fewer ADC evals per invocation.
+    hamming_in: int = 0
+    hamming_kept: int = 0
+    adc_evals: int = 0
 
     @property
     def billed_s(self) -> float:

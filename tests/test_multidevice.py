@@ -123,18 +123,18 @@ def test_distributed_search_on_4device_mesh():
     """))
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="pre-existing seed failure, now narrowed: the MoE dispatch half "
-    "(a concat-padded gather miscompiling under GSPMD — see "
-    "test_sharded_moe_dispatch_gather_repro) is fixed and the MoE-only "
-    "forward matches bitwise (test_sharded_moe_ffn_matches_single_device); "
-    "the residual 2×2-mesh divergence (mean |Δ|≈0.4) therefore lives in "
-    "the MLA attention path, tracked in ROADMAP.md open items.",
-)
 def test_sharded_moe_mla_forward_matches_single_device():
     """DeepSeek-style block (MLA attention + MoE FFN) on a 2x2 mesh must
-    reproduce single-device logits (no-drop capacity for determinism)."""
+    reproduce single-device logits (no-drop capacity for determinism).
+
+    Seed failure, fixed in two steps: the MoE dispatch half was a
+    concat-padded gather miscompiling under GSPMD (masked safe-gathers in
+    models/moe.py, PR 3); the residual mean |Δ|≈0.4 was the vocab-sharded
+    embedding gather feeding the lax.scan over stacked MLA blocks — the MLA
+    sub-parity tests below pin that the rope/absorb math itself was always
+    exact, and forward_train now constrains the embed output to
+    batch-over-`data` before the scan (raw-XLA behavior still pinned in
+    test_sharded_mla_scan_after_embed_repro)."""
     print(_run("""
         import dataclasses
         import jax, jax.numpy as jnp, numpy as np
@@ -235,6 +235,144 @@ def test_sharded_moe_dispatch_gather_repro():
                                         NamedSharding(mesh, P())))(xt, tok)
         np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
         print("concat-pad-gather-sharded OK")
+    """))
+
+
+def test_sharded_mla_attention_matches_single_device():
+    """MLA sub-parity 1/3: the attention block alone — rope application,
+    latent down/up projections, absorbed einsums — under the production
+    weight shardings (d_in over `data`, d_out over `model`) on the 2×2 mesh
+    must reproduce single-device outputs. This passing pins the full-forward
+    divergence *outside* the MLA math."""
+    print(_run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs.base import get_config
+        from repro.models import attention as A
+
+        cfg = get_config("deepseek-v2-lite-16b").reduced(
+            num_layers=2, d_model=64, d_ff=64, vocab_size=256)
+        params = A.init_mla(jax.random.PRNGKey(3), cfg)
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(4, 16, 64)).astype(np.float32))
+        pos = jnp.broadcast_to(jnp.arange(16)[None, :],
+                               (4, 16)).astype(jnp.int32)
+        y1 = A.mla_train(params, x, pos, cfg)
+
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        specs = {"wq": P("data", "model"), "w_dkv": P("data", "model"),
+                 "w_uk": P("data", "model"), "w_uv": P("data", "model"),
+                 "wo": P("model", "data")}
+        p_sh = {k: {"w": NamedSharding(mesh, specs[k])} for k in params}
+        x_sh = NamedSharding(mesh, P("data", None, None))
+        with mesh:
+            fn = jax.jit(lambda p, t: A.mla_train(p, t, pos, cfg),
+                         in_shardings=(p_sh, x_sh))
+            y2 = fn(params, x)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-4, atol=1e-5)
+        print("sharded-mla-attention-equivalence OK")
+    """))
+
+
+def test_mla_absorbed_decode_matches_materialized():
+    """MLA sub-parity 2/3: the rope/absorb split itself. Absorbed decode
+    (q projected into latent space, W_uk folded into the query) must equal
+    the materialized train-form attention at the same position — if the
+    full-forward divergence lived in the rope/absorb math this would fail
+    on a single device. Exact prefix parity is also pinned."""
+    print(_run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.base import get_config
+        from repro.models import attention as A
+
+        cfg = get_config("deepseek-v2-lite-16b").reduced(
+            num_layers=2, d_model=64, d_ff=64, vocab_size=256)
+        rng = np.random.default_rng(0)
+        b, s = 2, 9
+        x = jnp.asarray(rng.normal(size=(b, s + 1, 64)).astype(np.float32))
+        pos = jnp.broadcast_to(jnp.arange(s + 1)[None, :],
+                               (b, s + 1)).astype(jnp.int32)
+        params = A.init_mla(jax.random.PRNGKey(5), cfg)
+
+        y_full = A.mla_train(params, x, pos, cfg)
+        y_pre, cache = A.mla_prefill(params, x[:, :s], pos[:, :s], cfg,
+                                     buf_len=s + 1)
+        y_dec, _ = A.mla_decode(params, x[:, s:], cache, s, cfg)
+        np.testing.assert_array_equal(np.asarray(y_full[:, :s]),
+                                      np.asarray(y_pre))
+        np.testing.assert_allclose(np.asarray(y_full[:, s]),
+                                   np.asarray(y_dec[:, 0]),
+                                   rtol=1e-5, atol=1e-5)
+        print("mla-absorbed-decode-equivalence OK")
+    """))
+
+
+@pytest.mark.xfail(
+    strict=False,
+    reason="minimal repro of the residual MoE+MLA forward divergence: the "
+    "raw vocab-sharded embedding gather (L.embed, bypassing the sharding "
+    "hint _embed_inputs now applies as the production fix) feeding a "
+    "lax.scan over stacked MLA blocks returns wrong values under GSPMD on "
+    "the host-device mesh. The same scan fed pre-sharded activations "
+    "matches, the unrolled loop over the same blocks matches, and GQA "
+    "blocks under the same embed+scan match — so neither the rope/absorb "
+    "math nor the scan alone is at fault. Pinned so we notice if/when XLA "
+    "fixes it.",
+)
+def test_sharded_mla_scan_after_embed_repro():
+    """MLA sub-parity 3/3: raw embed gather → lax.scan(stacked MLA blocks),
+    the composition forward_train used before _embed_inputs gained its
+    sharding hint, with control arms asserted inside."""
+    print(_run("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs.base import get_config
+        from repro.models import layers as L
+        from repro.models import transformer as T
+        from repro.launch import shardings as SH
+
+        cfg = get_config("deepseek-v2-lite-16b").reduced(
+            num_layers=2, d_model=64, d_ff=64, vocab_size=256)
+        cfg = dataclasses.replace(cfg, num_experts=0)
+        rng = np.random.default_rng(0)
+        tokens = jnp.asarray(rng.integers(0, 256, (4, 16), dtype=np.int32))
+        params = T.init_params(jax.random.PRNGKey(3), cfg)
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        p_sh = SH.params_shardings(mesh, params)
+        t_sh = SH.batch_shardings(mesh, {"t": tokens})["t"]
+        pos = T.make_positions(4, 16)
+
+        def embed_scan(p, t):
+            x = L.embed(p["embed"], t)      # raw gather, no sharding hint
+            def body(carry, lp):
+                y, a = T.block_train(lp, carry, pos, cfg, kind="mla")
+                return y, a
+            x, _ = jax.lax.scan(body, x, p["blocks"])
+            return x
+
+        def embed_unroll(p, t):
+            x = L.embed(p["embed"], t)      # raw gather, no sharding hint
+            for i in range(2):
+                lp = jax.tree_util.tree_map(lambda a: a[i], p["blocks"])
+                x, _ = T.block_train(lp, x, pos, cfg, kind="mla")
+            return x
+
+        r1 = embed_scan(params, tokens)
+        with mesh:
+            r2 = jax.jit(embed_scan,
+                         in_shardings=(p_sh, t_sh))(params, tokens)
+            r2u = jax.jit(embed_unroll,
+                          in_shardings=(p_sh, t_sh))(params, tokens)
+        # Control arm: the unrolled loop over the SAME sharded params
+        # matches — the scan is the necessary ingredient.
+        np.testing.assert_allclose(np.asarray(r1), np.asarray(r2u),
+                                   rtol=1e-4, atol=1e-5)
+        # Failing arm: the scanned composition diverges (mean |delta|~0.4).
+        np.testing.assert_allclose(np.asarray(r1), np.asarray(r2),
+                                   rtol=1e-4, atol=1e-5)
+        print("sharded-mla-scan-after-embed OK")
     """))
 
 

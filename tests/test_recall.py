@@ -1,0 +1,131 @@
+"""Tier-1 recall regression gate (paper §5.3 + the autotune contract).
+
+Brute-force ground truth on a seeded synthetic dataset gates recall@k for
+both the static configuration (the paper's H_perc = 10 / R = 2 calibration)
+and the recall-targeted autotune profile — across all three backends. The
+autotuned profile must reach the target while evaluating strictly fewer ADC
+candidates than the static config, and the NumPy / jax / serverless planes
+must return bitwise-identical ids under the same calibration profile.
+"""
+
+import numpy as np
+import pytest
+
+from benchmarks.common import recall_at_k
+from repro.core.pipeline import SquashConfig, SquashIndex
+from repro.data import synthetic
+
+K = 10
+TARGET = 0.95
+
+
+@pytest.fixture(scope="module")
+def workload():
+    ds = synthetic.make_vector_dataset("sift1m", scale=0.01, num_queries=32,
+                                       seed=0)
+    preds = synthetic.default_predicates(ds.attr_cardinality)
+    gt_ids, _ = synthetic.ground_truth(ds, preds, k=K)
+    cfg = SquashConfig(num_partitions=8, hamming_perc=10.0, refine_ratio=2.0,
+                       kmeans_iters=6, lloyd_iters=10)
+    index = SquashIndex.build(ds.vectors, ds.attributes, cfg, seed=0)
+    return ds, preds, gt_ids, index
+
+
+@pytest.fixture(scope="module")
+def static_run(workload):
+    ds, preds, _, index = workload
+    assert index.profile is None
+    ids, dists, stats = index.search(ds.queries, preds, k=K, backend="numpy")
+    return ids, dists, stats
+
+
+@pytest.fixture(scope="module")
+def tuned_run(workload, static_run):
+    """Calibrate after the static pass so both configs run on one build."""
+    ds, preds, _, index = workload
+    profile = index.autotune(recall_target=TARGET, k=K, sample=64, seed=0)
+    ids, dists, stats = index.search(ds.queries, preds, k=K, backend="numpy")
+    return profile, ids, dists, stats
+
+
+def test_static_config_meets_target(workload, static_run):
+    _, _, gt_ids, _ = workload
+    ids, _, _ = static_run
+    rec = recall_at_k(ids, gt_ids)
+    assert rec >= TARGET, f"static recall@{K} = {rec}"
+
+
+def test_autotuned_meets_target_with_fewer_adc_evals(workload, static_run,
+                                                     tuned_run):
+    _, _, gt_ids, _ = workload
+    _, _, s_static = static_run
+    profile, ids, _, s_tuned = tuned_run
+    rec = recall_at_k(ids, gt_ids)
+    assert rec >= TARGET, f"autotuned recall@{K} = {rec}"
+    assert s_tuned.adc_evals < s_static.adc_evals, (
+        f"autotune must prune more: {s_tuned.adc_evals} vs "
+        f"{s_static.adc_evals} static ADC evals")
+    assert profile.recall_target == TARGET
+    assert profile.num_partitions == len(workload[3].parts)
+
+
+def test_backends_bitwise_identical_under_profile(workload, tuned_run):
+    """numpy / jax / serverless must agree bit-for-bit on ids (equal stats)
+    when searching under the same calibration profile."""
+    ds, preds, gt_ids, index = workload
+    _, ids_numpy, _, s_numpy = tuned_run
+    assert index.profile is not None
+
+    ids_jax, _, s_jax = index.search(ds.queries, preds, k=K, backend="jax")
+    np.testing.assert_array_equal(ids_numpy, ids_jax)
+    assert s_numpy == s_jax
+
+    from repro.serverless import RuntimeConfig, ServerlessRuntime
+
+    rt = ServerlessRuntime(index, RuntimeConfig(branching=3, max_level=2))
+    res = rt.search(ds.queries, preds, k=K)
+    np.testing.assert_array_equal(ids_numpy, res.ids)
+    assert res.stats == s_numpy
+    # The QP NodeTraces carry the pruning accounting the autotune turns into
+    # §3.5 dollars: their fold must equal the aggregate SearchStats.
+    qp = [n for n in res.trace.nodes if n.kind == "qp"]
+    assert sum(n.adc_evals for n in qp) == s_numpy.adc_evals
+    assert sum(n.hamming_kept for n in qp) == s_numpy.hamming_kept
+    assert recall_at_k(np.asarray(res.ids), gt_ids) >= TARGET
+
+
+def test_profile_artifact_reusable_across_backends(workload, tuned_run):
+    """A profile serialized + reloaded into a *fresh equal build* must
+    reproduce the tuned ids exactly (the artifact is the calibration)."""
+    from repro.core.autotune import CalibrationProfile
+
+    ds, preds, _, _ = workload
+    profile, ids_tuned, _, _ = tuned_run
+    cfg = SquashConfig(num_partitions=8, hamming_perc=10.0, refine_ratio=2.0,
+                       kmeans_iters=6, lloyd_iters=10)
+    rebuilt = SquashIndex.build(ds.vectors, ds.attributes, cfg, seed=0)
+    rebuilt.set_profile(CalibrationProfile.from_dict(profile.to_dict()))
+    ids, _, _ = rebuilt.search(ds.queries, preds, k=K, backend="numpy")
+    np.testing.assert_array_equal(ids, ids_tuned)
+
+
+def test_service_recall_target_calibrates_and_recalibrates(workload):
+    """ServiceConfig(recall_target=...) installs a profile at bind time and
+    re-calibrates when the index is swapped."""
+    from repro.serve.vector_service import ServiceConfig, VectorSearchService
+
+    ds, preds, gt_ids, _ = workload
+    cfg = SquashConfig(num_partitions=8, hamming_perc=10.0, refine_ratio=2.0,
+                       kmeans_iters=6, lloyd_iters=10)
+    index = SquashIndex.build(ds.vectors, ds.attributes, cfg, seed=0)
+    svc = VectorSearchService(index, ServiceConfig(
+        backend="numpy", recall_target=TARGET, calibration_sample=64,
+        calibration_seed=0))
+    assert svc.profile is not None
+    ids, _, _ = svc.query(ds.queries, preds, k=K)
+    assert recall_at_k(ids, gt_ids) >= TARGET
+
+    other = SquashIndex.build(ds.vectors, ds.attributes, cfg, seed=1)
+    svc.swap_index(other)
+    assert svc.profile is not None and svc.profile is other.profile
+    assert other.profile.num_partitions == len(other.parts)
