@@ -8,6 +8,11 @@ the wave's fleet cost prices any batch up to the paper's 1000 queries; the
 daily curve scales it against the two always-on server baselines
 (2× c7i.16xlarge / 2× c7i.4xlarge) to validate the paper's ordering:
 serverless cheaper until ~1M–3.5M queries/day.
+
+Since PR 5 the bench leads with a modeled-vs-measured latency comparison:
+the same warm wave under the virtual-time LocalTransport (modeled makespan)
+and under the real multi-process ProcessTransport (measured wall-clock),
+persisted under ``modeled_vs_measured`` in the saved JSON.
 """
 
 from __future__ import annotations
@@ -33,6 +38,45 @@ def _measured_batch_cost() -> dict:
     rt.search(ds.queries, preds, k=10)            # cold wave: warm the fleet
     trace = rt.search(ds.queries, preds, k=10).trace
     return {"trace": trace, "per_batch": trace.cost["total"]}
+
+
+def _modeled_vs_measured_latency() -> dict:
+    """Modeled §3.5 timeline vs real measured wall-clock, same choreography.
+
+    The same small fleet runs once under LocalTransport (virtual clock: QP
+    busy time pinned to the injected sleep, concurrency modeled by
+    staggered launch) and once under ProcessTransport (the sleep actually
+    elapses inside real worker processes, concurrently). Both warm waves are
+    compared: the modeled makespan prices the fleet, the measured one is
+    what a client would clock.
+    """
+    from benchmarks.common import build_tiny_squash_index
+    from repro.serverless import RuntimeConfig, ServerlessRuntime
+
+    sleep = 0.1
+    ds, preds, idx = build_tiny_squash_index(
+        scale=0.003, num_queries=16, num_partitions=4, seed=5)
+    local = ServerlessRuntime(idx, RuntimeConfig(
+        branching=2, max_level=1, qp_compute_s=sleep))
+    local.search(ds.queries, preds, k=10)
+    t_local = local.search(ds.queries, preds, k=10).trace
+    proc = ServerlessRuntime(idx, RuntimeConfig(
+        branching=2, max_level=1, transport="process", qa_workers=1,
+        worker_sleep_s=sleep))
+    try:
+        proc.search(ds.queries, preds, k=10)      # cold: build worker state
+        t_proc = proc.search(ds.queries, preds, k=10).trace
+    finally:
+        proc.close()
+    return {
+        "qp_busy_s": sleep,
+        "qp_invocations": t_proc.invocations("qp"),
+        "modeled_local_s": t_local.makespan_s,
+        "modeled_process_s": t_proc.makespan_s,
+        "measured_process_s": t_proc.measured_makespan_s,
+        "cost_modeled_local": t_local.cost["total"],
+        "cost_modeled_process": t_proc.cost["total"],
+    }
 
 
 def _autotune_adc_savings() -> dict:
@@ -74,6 +118,12 @@ def _autotune_adc_savings() -> dict:
 
 def run(quick: bool = True) -> dict:
     header("Fig. 8 — daily cost of SQUASH vs provisioned servers")
+    lat = _modeled_vs_measured_latency()
+    print(f"  modeled vs measured (warm wave, {lat['qp_invocations']} QPs x "
+          f"{lat['qp_busy_s']:.2f}s busy): modeled local "
+          f"{lat['modeled_local_s']:.3f}s / modeled process "
+          f"{lat['modeled_process_s']:.3f}s / MEASURED process "
+          f"{lat['measured_process_s']:.3f}s")
     tune = _autotune_adc_savings()
     print(f"  autotuned keep budgets: ADC evals {tune['adc_static']} → "
           f"{tune['adc_tuned']} ({tune['adc_savings']:.0%} fewer), "
@@ -108,6 +158,7 @@ def run(quick: bool = True) -> dict:
     save_json("bench_cost", {"rows": rows, "per_batch_cost": per_batch,
                              "crossover": crossover,
                              "autotune": tune,
+                             "modeled_vs_measured": lat,
                              "fleet": {"n_qa": trace.fleet.n_qa,
                                        "n_qp": trace.fleet.n_qp,
                                        "t_qa_s": trace.fleet.t_qa_s,

@@ -6,9 +6,20 @@ QA → QP choreography over a small index, and the makespans come out of the
 event-driven traces (tree mode vs the CO-invokes-everything strawman). Node
 busy times are pinned so the comparison isolates invocation structure; the
 first wave runs cold (empty container pools), the second warm.
+
+Since PR 5 the bench also sweeps the *transport*: the same choreography
+runs once under the virtual-time LocalTransport (modeled makespan) and once
+under the real multi-process ProcessTransport (measured wall-clock), tree
+vs sequential, with an injected per-QP busy-sleep standing in for heavy
+Stage 3–5 work. That yields the first measured (not modeled) data points of
+the perf trajectory: real concurrent QP waves beating the serialized
+strawman on the same worker fleet. Results persist as
+``results/BENCH_invocation.json`` via ``benchmarks/run.py``.
 """
 
 from __future__ import annotations
+
+import time
 
 from benchmarks.common import build_tiny_squash_index, header, save_json
 
@@ -16,13 +27,16 @@ CONFIGS = [(10, 1), (4, 2), (4, 3), (5, 3), (6, 3), (4, 4)]
 
 _COMPUTE = dict(qa_compute_s=0.05, qp_compute_s=0.05, co_compute_s=0.01)
 
+# Transport sweep: small fleet (4 partitions → 4 QP workers + 1 QA worker),
+# per-QP busy-sleep so the measurement reflects the transport, not the
+# microscopic toy index compute.
+_SWEEP_SLEEP_S = 0.15
 
-def run(quick: bool = True) -> dict:
-    header("Alg. 2 — tree invocation makespan vs sequential (real runtime)")
+
+def _virtual_sweep(quick: bool, ds, preds, idx) -> list:
     from repro.core.invocation import tree_size
     from repro.serverless import RuntimeConfig, ServerlessRuntime
 
-    ds, preds, idx = build_tiny_squash_index(seed=3)
     configs = CONFIGS if not quick else [c for c in CONFIGS if c != (4, 4)]
     rows = []
     for f, lmax in configs:
@@ -43,12 +57,63 @@ def run(quick: bool = True) -> dict:
         print(f"  F={f} l_max={lmax} N_QA={n:4d} "
               f"tree={tree_warm:.3f}s (cold {tree_cold:.3f}s) "
               f"seq={seq_warm:.3f}s ({seq_warm / tree_warm:.1f}x)")
+    return rows
+
+
+def _transport_sweep(ds, preds, idx) -> list:
+    """Measured wall-clock: ProcessTransport tree vs sequential strawman."""
+    from repro.serverless import RuntimeConfig, ServerlessRuntime
+
+    rows = []
+    for mode, sequential in (("tree", False), ("sequential", True)):
+        rt = ServerlessRuntime(idx, RuntimeConfig(
+            branching=2, max_level=1, sequential=sequential,
+            transport="process", qa_workers=1,
+            worker_sleep_s=_SWEEP_SLEEP_S))
+        try:
+            t0 = time.perf_counter()
+            cold = rt.search(ds.queries, preds, k=10)
+            cold_s = time.perf_counter() - t0
+            warm = rt.search(ds.queries, preds, k=10)
+        finally:
+            rt.close()
+        rows.append({
+            "mode": mode,
+            "transport": "process",
+            "qp_invocations": warm.trace.invocations("qp"),
+            "qp_busy_sleep_s": _SWEEP_SLEEP_S,
+            "measured_cold_s": cold_s,
+            "measured_warm_s": warm.trace.measured_makespan_s,
+            "modeled_warm_s": warm.trace.makespan_s,
+        })
+        print(f"  process/{mode:<10s} measured warm="
+              f"{warm.trace.measured_makespan_s:.3f}s "
+              f"(modeled {warm.trace.makespan_s:.3f}s, "
+              f"{warm.trace.invocations('qp')} QPs x "
+              f"{_SWEEP_SLEEP_S:.2f}s busy)")
+    tree_s = rows[0]["measured_warm_s"]
+    seq_s = rows[1]["measured_warm_s"]
+    assert tree_s < seq_s, (
+        f"concurrent QP wave ({tree_s:.3f}s) must beat the sequential "
+        f"strawman ({seq_s:.3f}s) in *measured* wall-clock")
+    print(f"  measured tree speedup over sequential: {seq_s / tree_s:.1f}x")
+    return rows
+
+
+def run(quick: bool = True) -> dict:
+    header("Alg. 2 — tree invocation makespan vs sequential (real runtime)")
+    ds, preds, idx = build_tiny_squash_index(seed=3)
+    rows = _virtual_sweep(quick, ds, preds, idx)
     assert all(r["speedup_warm"] > 2.0 for r in rows if r["n_qa"] >= 84), \
         "tree launch must beat sequential fan-out on large fleets"
     assert all(r["tree_cold_s"] >= r["tree_warm_s"] for r in rows), \
         "cold fleet cannot be faster than warm"
-    save_json("bench_invocation", {"rows": rows})
-    return {"rows": rows}
+    header("Transport sweep — measured wall-clock, process workers")
+    ds4, preds4, idx4 = build_tiny_squash_index(seed=3, num_partitions=4)
+    transport_rows = _transport_sweep(ds4, preds4, idx4)
+    payload = {"rows": rows, "transport": transport_rows}
+    save_json("BENCH_invocation", payload)
+    return payload
 
 
 if __name__ == "__main__":

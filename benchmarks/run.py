@@ -96,6 +96,28 @@ def smoke() -> int:
     assert tr.cost["total"] > 0 and tr.dre.invocations > 0
     assert tr.invocations("qa") == 12 and tr.invocations("co") == 1
 
+    # Transport-parity gate: the same choreography over the real
+    # multi-process worker pool must return the jax plane's ids bit-for-bit
+    # with equal stats, on a measured (not virtual) clock, with zero crash
+    # retries. CI wraps --smoke in a hard `timeout` so a hung worker pool
+    # fails the job fast instead of stalling it.
+    rt_proc = ServerlessRuntime(idx, RuntimeConfig(
+        branching=2, max_level=1, transport="process", qa_workers=1,
+        invoke_timeout_s=120.0))
+    try:
+        res_p = rt_proc.search(ds.queries, preds, k=10)
+        assert np.array_equal(res_p.ids, ids_j), "process-transport ids diverged"
+        assert res_p.stats == stats_j, (
+            f"process-transport stats drift: {res_p.stats} vs {stats_j}")
+        tp = res_p.trace
+        assert tp.transport == "process" and tp.measured_makespan_s > 0
+        assert tp.worker_retries == 0, "workers crashed during the smoke wave"
+        assert tp.dre.invocations > 0 and tp.cost["total"] > 0
+        warm_p = rt_proc.search(ds.queries, preds, k=10).trace
+        assert warm_p.dre.s3_gets == 0, "live workers must serve warm"
+    finally:
+        rt_proc.close()
+
     # §5.6 result-cache gate: with the cache enabled, both the cold pass and
     # the fully-repeated pass must stay bitwise-identical to the jax plane,
     # while the repeat pass shows strictly fewer invocations, payload bytes
@@ -134,7 +156,10 @@ def smoke() -> int:
 
     print(f"[smoke] OK in {time.time() - t0:.1f}s — recall@10="
           f"{recalls['jax']:.3f}, ids identical across numpy/jax/serverless"
-          f" (±cache); runtime: {tr.invocations('qa')} QA + "
+          f" (±cache, local AND process transport; process measured "
+          f"{tp.measured_makespan_s:.2f}s cold / "
+          f"{warm_p.measured_makespan_s:.2f}s warm); runtime: "
+          f"{tr.invocations('qa')} QA + "
           f"{tr.invocations('qp')} QP, ${tr.cost['total']:.6f}/batch; "
           f"cached repeat: {len(t2.nodes)} invocation(s), "
           f"${t2.cost['total']:.6f}/batch; autotuned: recall@10="

@@ -49,7 +49,8 @@ import numpy as np
 from repro.kernels import ops
 
 __all__ = [
-    "StackedIndex", "stack_index", "pack_query_bits", "adc_table_batch",
+    "StackedIndex", "stack_index", "part_stack_arrays", "stack_single_part",
+    "pack_query_bits", "adc_table_batch",
     "query_cells", "adc_lb_direct", "build_cand_arrays", "stage_counts",
     "static_counts", "batched_stage345", "make_plane",
 ]
@@ -101,6 +102,47 @@ jax.tree_util.register_dataclass(
 )
 
 
+def part_stack_arrays(pt, *, n_max: int, m1: int, d: int,
+                      dtype=np.float32) -> Dict[str, np.ndarray]:
+    """One partition's numpy slab of the stacked payload (no leading P axis).
+
+    The field values are exactly what :func:`stack_index` writes at that
+    partition's row, so a QueryProcessor worker holding only its own
+    partition can rebuild ``stack_index(index)[pid:pid+1]`` bit-for-bit from
+    (this dict, the global ``n_max``/``m1``) without the rest of the index —
+    the contract the ProcessTransport parity tests pin.
+    """
+    n = pt.size
+    g32 = pt.low.packed.shape[1]
+    out = {
+        "low_packed": np.zeros((n_max, g32), np.uint32),
+        "codes": np.zeros((n_max, d), np.int32),
+        "vectors": np.zeros((n_max, d), dtype),
+        "valid": np.zeros((n_max,), bool),
+        "vector_ids": np.full((n_max,), -1, np.int32),
+        "part_mean": np.asarray(pt.mean, dtype),
+        "klt": (pt.klt.astype(dtype) if pt.klt is not None
+                else np.eye(d, dtype=dtype)),
+        "low_mean": np.asarray(pt.low.mean, dtype),
+        "low_std": np.maximum(pt.low.std, 1e-12).astype(dtype),
+        "boundaries": np.full((m1, d), np.inf, dtype),
+        "cells": np.asarray(pt.quant.cells, np.int32),
+    }
+    out["low_packed"][:n] = pt.low.packed
+    out["codes"][:n] = pt.codes
+    out["vectors"][:n] = pt.vectors
+    out["valid"][:n] = True
+    out["vector_ids"][:n] = pt.vector_ids
+    mb = pt.quant.boundaries.shape[0]
+    out["boundaries"][:mb] = pt.quant.boundaries.astype(dtype)
+    return out
+
+
+def stack_single_part(arrays: Dict[str, np.ndarray]) -> StackedIndex:
+    """Build a 1-partition :class:`StackedIndex` from a part's slab arrays."""
+    return StackedIndex(**{k: jnp.asarray(v[None]) for k, v in arrays.items()})
+
+
 def stack_index(index, pad_to_multiple: int = 1,
                 dtype=np.float32) -> StackedIndex:
     """Stack a built ``SquashIndex`` into fixed-shape device arrays.
@@ -133,20 +175,18 @@ def stack_index(index, pad_to_multiple: int = 1,
     cells = np.ones((pad_p, d), np.int32)
 
     for i, pt in enumerate(parts):
-        n = pt.size
-        low_packed[i, :n] = pt.low.packed
-        codes[i, :n] = pt.codes
-        vectors[i, :n] = pt.vectors
-        valid[i, :n] = True
-        vector_ids[i, :n] = pt.vector_ids
-        part_mean[i] = pt.mean
-        if pt.klt is not None:
-            klt[i] = pt.klt.astype(dtype)
-        low_mean[i] = pt.low.mean
-        low_std[i] = np.maximum(pt.low.std, 1e-12)
-        mb = pt.quant.boundaries.shape[0]
-        boundaries[i, :mb] = pt.quant.boundaries.astype(dtype)
-        cells[i] = pt.quant.cells
+        pa = part_stack_arrays(pt, n_max=n_max, m1=m1, d=d, dtype=dtype)
+        low_packed[i] = pa["low_packed"]
+        codes[i] = pa["codes"]
+        vectors[i] = pa["vectors"]
+        valid[i] = pa["valid"]
+        vector_ids[i] = pa["vector_ids"]
+        part_mean[i] = pa["part_mean"]
+        klt[i] = pa["klt"]
+        low_mean[i] = pa["low_mean"]
+        low_std[i] = pa["low_std"]
+        boundaries[i] = pa["boundaries"]
+        cells[i] = pa["cells"]
     return StackedIndex(
         low_packed=jnp.asarray(low_packed),
         codes=jnp.asarray(codes),

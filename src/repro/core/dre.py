@@ -65,6 +65,7 @@ class Lease:
     dre_hit: bool
     fetch_s: float
     stats: DreStats = dataclasses.field(default_factory=DreStats)
+    epoch: int = 0    # pool derived-state epoch at acquire (staleness guard)
 
 
 class ContainerPool:
@@ -83,6 +84,7 @@ class ContainerPool:
     ):
         self._singletons: Dict[int, Hashable] = {}   # container id → data key
         self._derived: Dict[int, Set[Hashable]] = {}  # container id → state keys
+        self._epoch = 0                               # bumps on clear_derived
         self._next_container = 0
         self._free: list = []
         self._rng = random.Random(seed)
@@ -125,7 +127,7 @@ class ContainerPool:
         )
         self.stats.merge(delta)
         return Lease(container_id=cid, warm=warm, dre_hit=hit,
-                     fetch_s=fetch_s, stats=delta)
+                     fetch_s=fetch_s, stats=delta, epoch=self._epoch)
 
     def release(self, lease: Lease) -> None:
         self._free.append(lease.container_id)
@@ -150,13 +152,23 @@ class ContainerPool:
 
     def retain_derived(self, lease: Lease, key: Hashable) -> None:
         """Record that the lease's container now holds derived state ``key``
-        (only meaningful under DRE — callers gate on ``use_dre``)."""
+        (only meaningful under DRE — callers gate on ``use_dre``).
+
+        A lease acquired *before* the last :meth:`clear_derived` is stale:
+        its retain is dropped, so an in-flight invocation that straddles an
+        ``invalidate_cache()``/``swap_index`` cannot resurrect derived state
+        the invalidation just cleared (and would otherwise leak forever,
+        since its key embeds a dead ``index_version``)."""
+        if lease.epoch != self._epoch:
+            return
         self._derived.setdefault(lease.container_id, set()).add(key)
 
     def clear_derived(self) -> None:
         """Forget all retained derived state (e.g. on index invalidation),
-        so permanently-stale keys don't accumulate across rebuilds."""
+        so permanently-stale keys don't accumulate across rebuilds. Bumps
+        the epoch: leases acquired before the clear can no longer retain."""
         self._derived.clear()
+        self._epoch += 1
 
 
 def _entry_nbytes(key: Hashable, value: object) -> int:

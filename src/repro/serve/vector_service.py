@@ -57,6 +57,11 @@ class ServiceConfig:
     # without hand-building a runtime config.
     cache_enabled: bool = False
     result_cache_bytes: int = 64 * 1024 * 1024
+    # Execution substrate of the serverless backend (serverless.transport):
+    # None keeps the RuntimeConfig's choice; "local" pins the in-process
+    # virtual-time scheduler, "process" the real multi-process worker pool
+    # (ids bitwise-identical either way).
+    transport: Optional[str] = None
     # Recall-targeted Hamming autotune (core/autotune.py). When set, the
     # service calibrates a per-partition keep-budget profile against the
     # bound index (and re-calibrates on ``swap_index``); every backend —
@@ -113,6 +118,10 @@ class VectorSearchService:
                 cfg = dataclasses.replace(
                     cfg, cache_enabled=True,
                     result_cache_bytes=self.config.result_cache_bytes)
+            if (self.config.transport is not None
+                    and cfg.transport != self.config.transport):
+                cfg = dataclasses.replace(cfg,
+                                          transport=self.config.transport)
             self._runtime = ServerlessRuntime(self.index, cfg)
         return self._runtime
 
@@ -125,13 +134,22 @@ class VectorSearchService:
         """Rebind the service to a rebuilt index.
 
         Drops the serverless runtime (its stacked device payload, container
-        pools and result cache all describe the old index) so the next
-        serverless call rebuilds against the new one — cached results from
-        the old index can never be served.
+        pools, worker processes and result cache all describe the old index)
+        so the next serverless call rebuilds against the new one — cached
+        results from the old index can never be served, and process workers
+        holding old shards are shut down rather than leaked.
         """
         self.index = index
+        if self._runtime is not None:
+            self._runtime.close()
         self._runtime = None
         self._calibrate()
+
+    def close(self) -> None:
+        """Release backend resources (process-transport worker pools)."""
+        if self._runtime is not None:
+            self._runtime.close()
+            self._runtime = None
 
     def warmup(self, num_queries: int, k: Optional[int] = None) -> None:
         """Pre-trace the jax plane for a batch shape (DRE-style warm start)."""

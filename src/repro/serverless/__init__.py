@@ -3,19 +3,27 @@
 Event-driven Coordinator → QueryAllocator → QueryProcessor execution of the
 real SQUASH data plane:
 
-* ``events``  — the discrete-event loop (virtual clock) actors run on.
-* ``payload`` — request/response codec + Lambda-style byte budgets with an
-  explicit overflow policy (error vs chunked re-invocation).
-* ``nodes``   — the three actor roles: Coordinator fan-out/merge, QA
+* ``events``    — the discrete-event loop (virtual clock) actors run on.
+* ``payload``   — request/response codec + Lambda-style byte budgets with an
+  explicit overflow policy (error vs chunked re-invocation; oversized
+  single-query QP requests chunk on the candidate-row axis).
+* ``nodes``     — the three actor roles: Coordinator fan-out/merge, QA
   attribute filtering + Alg. 1 selection with the §2.5 filter-count
   guarantee, QP Stages 3–5 on its partition shard (``core.dataplane``).
-* ``traces``  — per-node latency/payload/DRE/cache records and the §3.5
-  cost assembly (``core.cost_model``).
-* ``runtime`` — the façade tying it together: ``ServerlessRuntime.search``
+* ``workers``   — the function *bodies* (QA plan / QP stages) plus the
+  long-lived worker-process loop ProcessTransport runs them in.
+* ``transport`` — the pluggable execution substrate: ``LocalTransport``
+  (inline, virtual-time modeled) and ``ProcessTransport`` (real
+  multiprocessing worker pool: codec-encoded payloads over process
+  boundaries, truly concurrent QP waves, real warm starts, crash retry).
+* ``traces``    — per-node latency/payload/DRE/cache records, the measured
+  wall-clock twin fields, and the §3.5 cost assembly (``core.cost_model``).
+* ``runtime``   — the façade tying it together: ``ServerlessRuntime.search``
   returns ids bitwise-identical to ``SquashIndex.search(backend="jax")``
-  plus a full run trace. With ``RuntimeConfig(cache_enabled=True)`` the
-  Coordinator consults the §5.6 result cache (``core.dre.ResultCache``)
-  and only cache-miss queries traverse the Alg. 2 tree.
+  plus a full run trace, under either transport
+  (``RuntimeConfig(transport="local" | "process")``). With
+  ``RuntimeConfig(cache_enabled=True)`` the Coordinator consults the §5.6
+  result cache and only cache-miss queries traverse the Alg. 2 tree.
 """
 
 from repro.core.dre import ResultCache
@@ -26,9 +34,12 @@ from repro.serverless.payload import (MAX_SYNC_PAYLOAD_BYTES,
 from repro.serverless.runtime import (RuntimeConfig, SearchResult,
                                       ServerlessRuntime)
 from repro.serverless.traces import NodeTrace, RunTrace
+from repro.serverless.transport import (LocalTransport, ProcessTransport,
+                                        Transport, TransportError)
 
 __all__ = [
     "EventLoop", "MAX_SYNC_PAYLOAD_BYTES", "PayloadOverflowError",
     "decode_message", "encode_message", "ResultCache", "RuntimeConfig",
     "SearchResult", "ServerlessRuntime", "NodeTrace", "RunTrace",
+    "Transport", "LocalTransport", "ProcessTransport", "TransportError",
 ]

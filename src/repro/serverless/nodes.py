@@ -32,7 +32,7 @@ from repro.core.pipeline import SquashIndex
 
 __all__ = ["Coordinator", "QueryAllocator", "QueryProcessor", "QAPlan",
            "merge_partition_topk", "split_search_request",
-           "split_processor_request"]
+           "split_processor_request", "split_processor_rows"]
 
 
 # ------------------------------------------------------------- request splits
@@ -55,6 +55,33 @@ def split_processor_request(req: Dict, lo: int, hi: int) -> Dict:
     out["take"] = req["take"][lo:hi]
     out["rows"] = req["rows"][off[lo]:off[hi]]
     out["row_offsets"] = (off[lo : hi + 1] - off[lo]).astype(np.int32)
+    return out
+
+
+def split_processor_rows(req: Dict, lo: int, hi: int) -> Dict:
+    """Secondary (candidate-row) axis split of a *single-query* QP request.
+
+    When one query's candidate list alone busts the payload budget, the
+    request splits along the partition's row axis instead of erroring (the
+    ROADMAP's known limit). Each row chunk keeps at most its own row count
+    (``keep``/``take`` clamp), which preserves a **superset** of the
+    unsplit stages' survivors: a row inside the unsplit top-``keep`` by
+    Hamming is top-``keep`` within any chunk containing it (fewer
+    competitors), and likewise for the ADC take — so the exact-distance
+    merge of the chunk responses returns the same ids. The runtime merges
+    same-query chunk responses in ascending chunk order, matching the
+    ascending-row tie order of the unsplit stream.
+    """
+    if int(req["qidx"].shape[0]) != 1:
+        raise ValueError("row-axis split applies to single-query requests")
+    rows = req["rows"][lo:hi]
+    out = dict(req)
+    out["rows"] = rows
+    out["row_offsets"] = np.asarray([0, rows.shape[0]], dtype=np.int32)
+    keep = np.minimum(np.asarray(req["keep"]), rows.shape[0])
+    out["keep"] = keep.astype(np.asarray(req["keep"]).dtype)
+    out["take"] = np.minimum(np.asarray(req["take"]), keep).astype(
+        np.asarray(req["take"]).dtype)
     return out
 
 

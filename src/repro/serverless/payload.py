@@ -95,13 +95,19 @@ def chunk_request(
     policy: str,
     split: Callable[[Dict, int, int], Dict],
     num_items: Callable[[Dict], int],
+    fallback_split: Callable[[Dict, int, int], Dict] = None,
+    fallback_num: Callable[[Dict], int] = None,
 ) -> List[Tuple[Dict, bytes]]:
     """Encode ``req``; on overflow apply the policy.
 
     ``split(req, lo, hi)`` must return the sub-request covering item
     positions [lo, hi) of the splittable axis (queries); ``num_items`` its
-    length. Returns [(request, encoded_bytes), ...] — one entry per
-    invocation the caller must issue.
+    length. When a *single-item* request still overflows and a fallback axis
+    is provided (``fallback_split``/``fallback_num`` — the QP requests'
+    candidate-row axis inside one partition), chunking recurses along it
+    instead of erroring; a request indivisible on every axis always raises.
+    Returns [(request, encoded_bytes), ...] — one entry per invocation the
+    caller must issue.
     """
     if policy not in OVERFLOW_POLICIES:
         raise ValueError(f"unknown overflow policy {policy!r}; "
@@ -114,16 +120,24 @@ def chunk_request(
             out.append((r, buf))
             return
         n = num_items(r)
-        if policy == "error" or n <= 1:
-            raise PayloadOverflowError(
-                f"request payload of {len(buf)} B exceeds the "
-                f"{max_bytes} B budget"
-                + ("" if policy == "chunk"
-                   else " (overflow policy 'error')")
-                + (" and cannot be split below one query" if n <= 1 else "")
-            )
-        rec(split(r, 0, n // 2))
-        rec(split(r, n // 2, n))
+        if policy != "error" and n > 1:
+            rec(split(r, 0, n // 2))
+            rec(split(r, n // 2, n))
+            return
+        if policy != "error" and fallback_split is not None:
+            m = fallback_num(r)
+            if m > 1:
+                rec(fallback_split(r, 0, m // 2))
+                rec(fallback_split(r, m // 2, m))
+                return
+        raise PayloadOverflowError(
+            f"request payload of {len(buf)} B exceeds the "
+            f"{max_bytes} B budget"
+            + ("" if policy == "chunk"
+               else " (overflow policy 'error')")
+            + (" and cannot be split further"
+               if policy == "chunk" and n <= 1 else "")
+        )
 
     rec(req)
     return out

@@ -1,44 +1,58 @@
 """ServerlessRuntime — event-driven execution of the SQUASH system layer.
 
-One ``search()`` call replays the paper's §3.3 choreography on a virtual
-clock: the client invokes the Coordinator; the Coordinator fans out over the
-Algorithm 2 ID-jump tree (or the sequential strawman); every QueryAllocator
-runs Stage 1 + Algorithm 1 on its own query slice and invokes one
-QueryProcessor per visited partition; QPs execute Stages 3–5 of the real
-batched data plane on their partition shard; results merge back up the tree
-via the MPI-style top-k combine. Along the way the runtime models what the
-old simulators only sketched:
+One ``search()`` call replays the paper's §3.3 choreography: the client
+invokes the Coordinator; the Coordinator fans out over the Algorithm 2
+ID-jump tree (or the sequential strawman); every QueryAllocator runs
+Stage 1 + Algorithm 1 on its own query slice and invokes one QueryProcessor
+per visited partition; QPs execute Stages 3–5 of the real batched data
+plane on their partition shard; results merge back up the tree via the
+MPI-style top-k combine. Along the way the runtime models what the old
+simulators only sketched:
 
 * payload byte budgets — every hop is encoded through the codec and checked
-  against the Lambda-style 6 MB cap with an explicit overflow policy;
+  against the Lambda-style 6 MB cap with an explicit overflow policy
+  (oversized requests chunk on the query axis, and a single query whose
+  candidate rows alone bust the budget chunks on the partition-row axis);
 * DRE — warm-container reuse through ``core.dre.ContainerPool`` leases, one
   pool per function (``squash-allocator``, ``squash-processor-<pid>``),
-  extended from "dataset fetched" to *derived-state retention*: a warm QP
-  container that already materialized its partition slice skips the setup
-  step on top of skipping the S3 fetch;
+  extended from "dataset fetched" to *derived-state retention*;
 * the §5.6 result cache — with ``cache_enabled`` the Coordinator splits
-  every incoming batch into hit/miss query slices before fan-out: only
-  misses traverse the Alg. 2 tree (hits pay no QA/QP GB-seconds and no
-  fan-out payload bytes) and are inserted on completion; hits merge back
-  into the final :class:`SearchResult` and are marked cache-served on the
-  CO's :class:`~repro.serverless.traces.NodeTrace` and the
-  :class:`~repro.serverless.traces.RunTrace`;
+  every incoming batch into hit/miss query slices before fan-out;
 * per-node latency traces and the §3.5 dollar breakdown via
   ``core.cost_model``.
 
+Since PR 5 the *execution substrate* is pluggable
+(``RuntimeConfig(transport=...)``, see ``serverless.transport``):
+
+* ``"local"`` — handler bodies run inline under the virtual-time scheduler
+  (``events.EventLoop``); concurrency, warm starts and fetches are modeled.
+  This is bit- and trace-compatible with PRs 2–4.
+* ``"process"`` — handler bodies run in long-lived worker *processes* (one
+  per QP partition + a pool for the allocator function): payloads cross
+  real process boundaries codec-encoded under the same byte budget, QP
+  waves execute genuinely concurrently (eager submission; the
+  ``sequential=True`` strawman defers sends so the measured comparison is
+  honest), warm starts / data retention are real (keyed to worker OS pids)
+  and crashed workers are respawned with bounded re-invocation. The
+  *modeled* §3.5 timeline is still assembled — with measured handler/fetch
+  times folded in — and ``RunTrace.measured_makespan_s`` plus the per-node
+  ``wall_*`` fields report the real clock next to it.
+
 Parity contract: for the same index/queries/predicates/k, the returned ids
-are **bitwise identical** to ``SquashIndex.search(backend="jax")`` — the QPs
-run the same jitted plane over partition slices of the same stacked payload,
-and the ascending-partition stable merge reproduces the reference
-tie-breaking. The aggregate :class:`~repro.core.pipeline.SearchStats` match
-exactly too, *except* that on a cache-enabled run the stage counters cover
-only the miss slice (cache-served queries did no stage work; the trace's
-``cache_hits`` accounts for them).
+are **bitwise identical** across ``transport="local"``,
+``transport="process"`` and ``SquashIndex.search(backend="jax")`` — every
+substrate runs the same jitted plane over the same partition slices, and
+the ascending-partition stable merge reproduces the reference tie-breaking.
+The aggregate :class:`~repro.core.pipeline.SearchStats` match exactly too,
+*except* that on a cache-enabled run the stage counters cover only the miss
+slice, and under row-axis payload chunking the keep/take counters reflect
+the per-chunk budgets (documented in ``nodes.split_processor_rows``).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -51,6 +65,8 @@ from repro.core.dre import ContainerPool, DreStats, Lease, ResultCache
 from repro.core.pipeline import SearchStats, SquashIndex
 from repro.serverless import nodes as nd
 from repro.serverless import payload as pl
+from repro.serverless import transport as tp
+from repro.serverless import workers as wk
 from repro.serverless.events import EventLoop
 from repro.serverless.traces import NodeTrace, RunTrace, assemble_run_trace
 
@@ -64,6 +80,17 @@ class RuntimeConfig:
     branching: int = 4                 # F — Alg. 2 fan-out
     max_level: int = 2                 # l_max — tree depth below the CO
     sequential: bool = False           # CO-invokes-everything strawman (Fig. 7)
+
+    # Execution substrate (serverless.transport).
+    transport: str = "local"           # "local" | "process"
+    qa_workers: int = 2                # allocator-function pool size (process)
+    worker_start_method: str = "spawn"  # multiprocessing start method
+    invoke_timeout_s: float = 180.0    # per-invocation hang guard (process)
+    max_worker_retries: int = 2        # re-invocations after a worker crash
+    worker_sleep_s: float = 0.0        # injected QueryProcessor busy-sleep —
+                                       # emulates heavyweight Stage 3–5 work
+                                       # so concurrency benches/tests measure
+                                       # the transport, not the tiny index
 
     # Payload budget (§3.3): Lambda's synchronous request/response cap.
     max_payload_bytes: int = pl.MAX_SYNC_PAYLOAD_BYTES
@@ -88,8 +115,9 @@ class RuntimeConfig:
     invoke_stagger_s: float = 0.002    # thread-spawn serialization per child
     payload_bandwidth_bps: float = 300e6
 
-    # Node busy times: None → measured host wall time of the real handler;
-    # a float pins the virtual compute time (benchmark configurations).
+    # Node busy times: None → measured wall time of the real handler (host
+    # wall under LocalTransport, the worker's own report under
+    # ProcessTransport); a float pins the virtual compute time.
     co_compute_s: Optional[float] = None
     qa_compute_s: Optional[float] = None
     qp_compute_s: Optional[float] = None
@@ -107,6 +135,9 @@ class RuntimeConfig:
         if self.overflow not in pl.OVERFLOW_POLICIES:
             raise ValueError(f"unknown overflow policy {self.overflow!r}; "
                              f"expected {pl.OVERFLOW_POLICIES}")
+        if self.transport not in tp.TRANSPORTS:
+            raise ValueError(f"unknown transport {self.transport!r}; "
+                             f"expected {tp.TRANSPORTS}")
         if self.branching < 1 or self.max_level < 1:
             raise ValueError("branching and max_level must be >= 1")
 
@@ -141,6 +172,40 @@ class _Gather:
         self.dists[rows] = resp["dists"]
 
 
+class _ChunkGather(_Gather):
+    """Chunk-ordered top-k merge accumulator for QueryProcessor responses.
+
+    Query-axis chunks carry disjoint query sets, for which the merge
+    degenerates to the plain scatter; *row-axis* chunks (one query's
+    candidate rows split across invocations) share a query index, and their
+    per-chunk top-k streams merge by (distance, chunk order) — chunk order
+    is ascending row order, reproducing the unsplit stream's tie-breaking.
+    Responses are merged in ascending chunk index regardless of arrival
+    order, so ProcessTransport completion races cannot reorder ties.
+    """
+
+    def __init__(self, qidx: np.ndarray, k: int):
+        super().__init__(qidx, k)
+        self.k = k
+        self._parts: Dict[int, Dict] = {}
+
+    def add(self, ci: int, resp: Dict) -> None:
+        self._parts[ci] = resp
+
+    def merged(self):
+        for ci in sorted(self._parts):
+            resp = self._parts[ci]
+            if resp["qidx"].shape[0] == 0:
+                continue
+            rows = self.rows_of(resp["qidx"])
+            cat_i = np.concatenate([self.ids[rows], resp["ids"]], axis=1)
+            cat_d = np.concatenate([self.dists[rows], resp["dists"]], axis=1)
+            order = np.argsort(cat_d, axis=1, kind="stable")[:, :self.k]
+            self.ids[rows] = np.take_along_axis(cat_i, order, axis=1)
+            self.dists[rows] = np.take_along_axis(cat_d, order, axis=1)
+        return self.ids, self.dists
+
+
 class ServerlessRuntime:
     """The serverless system façade bound to one resident :class:`SquashIndex`."""
 
@@ -157,7 +222,9 @@ class ServerlessRuntime:
                        fetch_rtt_s=self.cfg.fetch_rtt_s)
         # One pool per Lambda *function*: the shared allocator function and
         # one processor function per partition (squash-processor-<pid>), so a
-        # warm QP container always matches its partition's singleton.
+        # warm QP container always matches its partition's singleton. Under
+        # ProcessTransport these virtual pools are bypassed — warm/retention
+        # economics come from the real workers.
         self.qa_pool = ContainerPool(seed=self.cfg.seed + 1, **pool_kw)
         self.qp_pools = {
             pid: ContainerPool(seed=self.cfg.seed + 2 + pid, **pool_kw)
@@ -174,6 +241,73 @@ class ServerlessRuntime:
         self._processors: Dict[int, nd.QueryProcessor] = {}
         self._planes: Dict = {}
         self._trace_counter = [0]
+        self._transport: Optional[tp.Transport] = None
+
+    # ------------------------------------------------------------- transport
+
+    @property
+    def is_process(self) -> bool:
+        return self.cfg.transport == "process"
+
+    @property
+    def transport(self) -> tp.Transport:
+        """The execution substrate, built lazily (process workers are
+        long-lived across searches — that is what makes DRE warm hits real)."""
+        if self._transport is None:
+            if self.is_process:
+                self._transport = self._build_process_transport()
+            else:
+                self._transport = tp.LocalTransport(self._local_handlers())
+        return self._transport
+
+    def _local_handlers(self) -> Dict[str, Callable]:
+        def qa(fn: str, req: Dict, extra: Dict):
+            return wk.qa_compute(self.allocator, req,
+                                 int(extra["olo"]), int(extra["ohi"]))
+
+        def qp(fn: str, req: Dict, extra: Dict):
+            pid = int(fn.split(":", 1)[1])
+            return wk.qp_compute(self.processor(pid), req)
+
+        return {"qa": qa, "qp": qp}
+
+    def _build_process_transport(self) -> tp.ProcessTransport:
+        import jax
+
+        cfg = self.cfg
+        x64 = bool(jax.config.jax_enable_x64)
+        platform = os.environ.get("JAX_PLATFORMS", "cpu") or "cpu"
+        inits = {
+            "qa": (wk.WorkerInit(role="qa", fn="qa", pid=None, x64=x64,
+                                 platform=platform,
+                                 bundle=wk.build_qa_bundle(self.index)),
+                   max(1, cfg.qa_workers)),
+        }
+        for pid in range(self.n_qp):
+            inits[f"qp:{pid}"] = (
+                wk.WorkerInit(role="qp", fn=f"qp:{pid}", pid=pid, x64=x64,
+                              platform=platform,
+                              bundle=wk.build_qp_bundle(self.index, pid,
+                                                        self._dtype)),
+                1)
+        return tp.ProcessTransport(
+            inits,
+            eager=not cfg.sequential,
+            start_method=cfg.worker_start_method,
+            invoke_timeout_s=cfg.invoke_timeout_s,
+            max_retries=cfg.max_worker_retries)
+
+    def close(self) -> None:
+        """Shut down the transport (terminates process workers)."""
+        if self._transport is not None:
+            self._transport.close()
+            self._transport = None
+
+    def __enter__(self) -> "ServerlessRuntime":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # ------------------------------------------------------------- resources
 
@@ -223,11 +357,13 @@ class ServerlessRuntime:
 
         Bumping ``index_version`` makes every container's retained derived
         state stale (their keys embed the version); clearing the pools'
-        retained sets keeps permanently-stale keys from accumulating. This
-        does NOT rebind the runtime to new index data — the stacked device
-        payload and per-partition processors still describe the index this
-        runtime was built on. To serve a *rebuilt* index, build a new
-        ``ServerlessRuntime`` (``VectorSearchService.swap_index`` does).
+        retained sets keeps permanently-stale keys from accumulating, and
+        bumps the pools' epoch so an in-flight lease cannot resurrect the
+        cleared state on release. This does NOT rebind the runtime to new
+        index data — the stacked device payload, per-partition processors
+        and process workers still describe the index this runtime was built
+        on. To serve a *rebuilt* index, build a new ``ServerlessRuntime``
+        (``VectorSearchService.swap_index`` does).
         """
         self.index_version += 1
         if self.result_cache is not None:
@@ -264,7 +400,8 @@ class ServerlessRuntime:
                 [], makespan_s=0.0, escalations=0, dre=DreStats(),
                 efs_reads=0, efs_read_bytes=0, stats=SearchStats(),
                 mem_qa_mb=self.cfg.mem_qa_mb, mem_qp_mb=self.cfg.mem_qp_mb,
-                mem_co_mb=self.cfg.mem_co_mb, prices=self.cfg.prices)
+                mem_co_mb=self.cfg.mem_co_mb, prices=self.cfg.prices,
+                transport=self.cfg.transport)
             return SearchResult(ids=np.full((0, k), -1, np.int64),
                                 dists=np.full((0, k), np.inf),
                                 stats=SearchStats(), trace=empty)
@@ -272,11 +409,21 @@ class ServerlessRuntime:
 
 
 class _Execution:
-    """One search run: the event choreography plus its accumulators."""
+    """One search run: the event choreography plus its accumulators.
+
+    The choreography is transport-agnostic: every function body executes
+    through ``transport.submit(...).result()``. Under LocalTransport the
+    submit is lazy and the body runs inline at collection, reproducing the
+    PR 2–4 virtual-time behavior exactly; under ProcessTransport submits
+    are eager at *issue* time, so one wave's workers run concurrently while
+    the virtual scheduler collects their results in deterministic order.
+    """
 
     def __init__(self, rt: ServerlessRuntime, qn: int, k: int):
         self.rt = rt
         self.cfg = rt.cfg
+        self.transport = rt.transport
+        self.process = rt.is_process
         self.loop = EventLoop()
         self.qn = qn
         self.k = k
@@ -291,6 +438,7 @@ class _Execution:
         self.cache_misses = 0
         self.out_ids = np.full((qn, k), -1, dtype=np.int64)
         self.out_dists = np.full((qn, k), np.inf, dtype=np.float64)
+        self.wall0 = time.perf_counter()
 
     # ------------------------------------------------------------- utilities
 
@@ -314,6 +462,36 @@ class _Execution:
         return (self.cfg.invoke_latency_warm_s if warm
                 else self.cfg.invoke_latency_cold_s)
 
+    def _merge_real_dre(self, info: tp.InvokeInfo, data_bytes: int,
+                        derived: bool = False) -> None:
+        """Fold a worker's real container report into the run's DreStats."""
+        self.dre.merge(DreStats(
+            invocations=1,
+            warm_starts=int(info.warm),
+            dre_hits=int(info.state_hit),
+            derived_hits=int(derived and info.state_hit),
+            s3_gets=int(not info.state_hit),
+            bytes_fetched=0 if info.state_hit else data_bytes,
+            fetch_seconds=info.fetch_s,
+        ))
+
+    def _wall_kw(self, info: Optional[tp.InvokeInfo],
+                 t0: float, t1: float) -> Dict:
+        """NodeTrace measured-wall fields, relative to the run submit."""
+        if info is not None and self.process:
+            return dict(wall_issue_s=info.wall_submit - self.wall0,
+                        wall_start_s=info.wall_sent - self.wall0,
+                        wall_end_s=info.wall_done - self.wall0,
+                        wall_compute_s=info.compute_s,
+                        worker_pid=info.os_pid,
+                        retries=info.retries)
+        return dict(wall_issue_s=t0 - self.wall0,
+                    wall_start_s=t0 - self.wall0,
+                    wall_end_s=t1 - self.wall0,
+                    wall_compute_s=t1 - t0,
+                    worker_pid=os.getpid(),
+                    retries=0)
+
     # ------------------------------------------------------------------ run
 
     def run(self, queries: np.ndarray, predicates: List[Predicate]
@@ -334,13 +512,15 @@ class _Execution:
                                t_issue=0.0, parent="client",
                                respond=root_respond)
         makespan = self.loop.run()
+        measured = time.perf_counter() - self.wall0
         trace = assemble_run_trace(
             self.nodes, makespan_s=makespan, escalations=self.escalations,
             dre=self.dre, efs_reads=self.efs_reads,
             efs_read_bytes=self.efs_read_bytes, stats=self.stats,
             mem_qa_mb=self.cfg.mem_qa_mb, mem_qp_mb=self.cfg.mem_qp_mb,
             mem_co_mb=self.cfg.mem_co_mb, prices=self.cfg.prices,
-            cache_hits=self.cache_hits, cache_misses=self.cache_misses)
+            cache_hits=self.cache_hits, cache_misses=self.cache_misses,
+            transport=self.cfg.transport, measured_makespan_s=measured)
         return SearchResult(ids=self.out_ids, dists=self.out_dists,
                             stats=self.stats, trace=trace)
 
@@ -368,6 +548,7 @@ class _Execution:
             num_items=lambda r: r["qidx"].shape[0])
         gather = _Gather(req["qidx"], self.k)
         state = {"left": len(chunks)}
+        olo, ohi = self._own_range(spec)
 
         def chunk_done(resp: Dict) -> None:
             gather.scatter(resp)
@@ -378,10 +559,20 @@ class _Execution:
 
         launch_s = 0.0
         for ci, (creq, buf) in enumerate(chunks):
+            pinv, lease = None, None
             if kind == "co":
-                lease = None
+                # The Coordinator runs where the runtime lives (it fronts
+                # the client); its empty own-slice plan is computed inline.
                 warm, hit, fetch_s = True, False, 0.0
+            elif self.process:
+                pinv = self.transport.submit(
+                    "qa", payload=buf, extra={"olo": olo, "ohi": ohi})
+                warm = pinv.predicted_warm
+                hit, fetch_s = warm, 0.0       # refined from the worker report
             else:
+                # Local: the lease models warm/fetch now; the body itself is
+                # submitted at collection, on the handler's *decoded* wire
+                # request, so the codec stays on the hop's real path.
                 lease = self._acquire(
                     self.rt.qa_pool,
                     (self.cfg.dataset_tag, "qa-index"),
@@ -393,22 +584,21 @@ class _Execution:
             t_start = t_i + inv + self._tx(len(buf))
             # The handler decodes the wire bytes — the codec is on the real
             # path of every hop, not just in the byte accounting.
-            self.loop.at(t_start, lambda buf=buf, lease=lease,
+            self.loop.at(t_start, lambda buf=buf, lease=lease, pinv=pinv,
                          warm=warm, hit=hit, fetch_s=fetch_s, inv=inv,
                          ci=ci, t_i=t_i, t_start=t_start:
                          self._allocator_handler(
                              spec, kind, name, parent, ci,
                              pl.decode_message(buf), len(buf),
-                             lease, warm, hit, fetch_s, inv, t_i, t_start,
-                             chunk_done))
+                             lease, pinv, warm, hit, fetch_s, inv, t_i,
+                             t_start, chunk_done))
         return launch_s
 
     def _allocator_handler(
-        self, spec, kind, name, parent, ci, creq, req_bytes, lease,
+        self, spec, kind, name, parent, ci, creq, req_bytes, lease, pinv,
         warm, hit, fetch_s, inv, t_issue, t_start, respond_chunk,
     ) -> None:
         cfg = self.cfg
-        t_avail = t_start + fetch_s
         t0 = time.perf_counter()
         predicates = pl.predicates_from_json(creq["preds"])
         k = int(creq["k"])
@@ -440,16 +630,37 @@ class _Execution:
 
         olo, ohi = self._own_range(spec)
         own_mask = (qidx >= olo) & (qidx < ohi)
-        own_qidx, own_q = qidx[own_mask], queries[own_mask]
-        plan = self.rt.allocator.plan(own_qidx, own_q, predicates, k)
-        measured = time.perf_counter() - t0
+        own_qidx = qidx[own_mask]
+
+        # Collect the node's plan from the transport. The CO plans inline
+        # (its own slice is empty by construction); QA plans were submitted
+        # at issue — under ProcessTransport they may already have finished
+        # in a worker while sibling handlers ran.
+        winfo = None
+        if kind == "co":
+            presp = wk.qa_compute(self.rt.allocator, creq, olo, ohi)
+        elif self.process:
+            raw, winfo = pinv.result()
+            presp = wk.unpack_plan_response(raw)
+            warm, hit, fetch_s = winfo.warm, winfo.state_hit, winfo.fetch_s
+            self._merge_real_dre(winfo, self.rt.qa_data_bytes())
+        else:
+            pinv = self.transport.submit(
+                "qa", request=creq, extra={"olo": olo, "ohi": ohi})
+            presp, winfo = pinv.result()
+        t1 = time.perf_counter()
+        measured = (winfo.compute_s if (self.process and winfo is not None)
+                    else t1 - t0)
         fixed = cfg.co_compute_s if kind == "co" else cfg.qa_compute_s
         compute_s = measured if fixed is None else fixed
+        t_avail = t_start + fetch_s
         t_ready = t_avail + compute_s
+        wallkw = self._wall_kw(winfo, t0, t1)
 
-        self.stats.filter_pass += plan.filter_pass
-        self.stats.partitions_visited += plan.partitions_visited
-        self.escalations += plan.escalations
+        qp_requests = presp["plans"]
+        self.stats.filter_pass += presp["filter_pass"]
+        self.stats.partitions_visited += presp["partitions_visited"]
+        self.escalations += presp["escalations"]
 
         gather = _Gather(full_qidx, k)
         m_own = own_qidx.shape[0]
@@ -490,7 +701,7 @@ class _Execution:
                 request_bytes=req_bytes, response_bytes=len(rbuf),
                 warm=warm, dre_hit=hit, queries=int(full_qidx.shape[0]),
                 own_queries=m_own, response_chunks=n_pages,
-                cache_hits=len(hit_entries)))
+                cache_hits=len(hit_entries), **wallkw))
             if lease is not None:
                 self.loop.at(t_end, lambda: self.rt.qa_pool.release(lease))
             self.loop.at(t_end + self._tx(len(rbuf)),
@@ -533,12 +744,11 @@ class _Execution:
                     ch, subreq, t_avail + i * cfg.invoke_stagger_s, name,
                     child_done)
 
-        for j, pid in enumerate(sorted(plan.qp_requests)):
-            qreq = plan.qp_requests[pid]
+        for j, pid in enumerate(sorted(qp_requests)):
+            qreq = qp_requests[pid]
             pending["n"] += 1
 
-            def qp_done(resp: Dict, pid: int = pid,
-                        qreq: Dict = qreq) -> None:
+            def qp_done(resp: Dict, pid: int = pid) -> None:
                 rows = own_gather.rows_of(resp["qidx"])
                 own_streams[pid] = (rows, resp["ids"], resp["dists"])
                 done()
@@ -564,53 +774,86 @@ class _Execution:
         chunks = pl.chunk_request(
             req, max_bytes=cfg.max_payload_bytes, policy=cfg.overflow,
             split=nd.split_processor_request,
-            num_items=lambda r: r["qidx"].shape[0])
-        gather = _Gather(req["qidx"], self.k)
+            num_items=lambda r: r["qidx"].shape[0],
+            fallback_split=nd.split_processor_rows,
+            fallback_num=lambda r: int(r["rows"].shape[0]))
+        gather = _ChunkGather(req["qidx"], self.k)
         state = {"left": len(chunks)}
 
-        def chunk_done(resp: Dict) -> None:
-            gather.scatter(resp)
+        def chunk_done(ci: int, resp: Dict) -> None:
+            gather.add(ci, resp)
             state["left"] -= 1
             if state["left"] == 0:
-                respond({"qidx": req["qidx"], "ids": gather.ids,
-                         "dists": gather.dists})
+                ids, dists = gather.merged()
+                respond({"qidx": req["qidx"], "ids": ids, "dists": dists})
 
         for ci, (creq, buf) in enumerate(chunks):
-            lease = self._acquire(
-                self.rt.qp_pools[pid],
-                f"{cfg.dataset_tag}/part{pid}",
-                self.rt.qp_data_bytes(pid))
-            inv = self._invoke_overhead(lease.warm)
+            pinv, lease = None, None
+            if self.process:
+                pinv = self.transport.submit(
+                    f"qp:{pid}", payload=buf,
+                    extra={"sleep_s": cfg.worker_sleep_s})
+                warm = pinv.predicted_warm
+            else:
+                lease = self._acquire(
+                    self.rt.qp_pools[pid],
+                    f"{cfg.dataset_tag}/part{pid}",
+                    self.rt.qp_data_bytes(pid))
+                warm = lease.warm
+            inv = self._invoke_overhead(warm)
             t_i = t_issue + ci * cfg.invoke_stagger_s
             t_start = t_i + inv + self._tx(len(buf))
-            self.loop.at(t_start, lambda buf=buf, lease=lease,
-                         inv=inv, ci=ci, t_i=t_i, t_start=t_start:
+            # Local handlers decode the wire bytes at collection (codec on
+            # the hop's real path); process workers decode in-process.
+            self.loop.at(t_start, lambda lease=lease, pinv=pinv,
+                         buf=buf, inv=inv, ci=ci, t_i=t_i, t_start=t_start:
                          self._processor_handler(
-                             pid, parent, ci, pl.decode_message(buf),
-                             len(buf), lease, inv, t_i, t_start, chunk_done))
+                             pid, parent, ci,
+                             None if pinv else pl.decode_message(buf),
+                             len(buf), lease, pinv,
+                             inv, t_i, t_start, chunk_done))
 
     def _processor_handler(
-        self, pid, parent, ci, creq, req_bytes, lease, inv, t_issue,
+        self, pid, parent, ci, creq, req_bytes, lease, pinv, inv, t_issue,
         t_start, respond_chunk,
     ) -> None:
         cfg = self.cfg
-        # Derived-state retention (DRE beyond the fetch): a container that
-        # already materialized this partition's device-resident slice skips
-        # the setup step; DRE-off pays it on every invocation. Keys embed
-        # the index version so invalidation makes retained state stale.
-        pool = self.rt.qp_pools[pid]
-        setup_s = cfg.qp_setup_s
-        if cfg.use_dre:
-            dkey = ("stacked", pid, self.rt.index_version)
-            if pool.derived_hit(lease, dkey):
-                setup_s = 0.0
-                self.dre.derived_hits += 1
-            else:
-                pool.retain_derived(lease, dkey)
-        t_avail = t_start + lease.fetch_s + setup_s
         t0 = time.perf_counter()
-        resp, counters = self.rt.processor(pid).handle(creq)
-        measured = time.perf_counter() - t0
+        if self.process:
+            raw, winfo = pinv.result()
+            resp, counters = wk.unpack_qp_response(raw)
+            warm, hit, fetch_s = winfo.warm, winfo.state_hit, winfo.fetch_s
+            # In a real worker, retained derived state (the device-resident
+            # slice + traced plane) lives and dies with the process — a
+            # state hit *is* a derived hit.
+            self._merge_real_dre(winfo, self.rt.qp_data_bytes(pid),
+                                 derived=True)
+            setup_s = 0.0
+            measured = winfo.compute_s
+            t1 = time.perf_counter()
+        else:
+            # Derived-state retention (DRE beyond the fetch): a container
+            # that already materialized this partition's device-resident
+            # slice skips the setup step; DRE-off pays it on every
+            # invocation. Keys embed the index version so invalidation
+            # makes retained state stale.
+            winfo = None
+            warm, hit, fetch_s = lease.warm, lease.dre_hit, lease.fetch_s
+            pool = self.rt.qp_pools[pid]
+            setup_s = cfg.qp_setup_s
+            if cfg.use_dre:
+                dkey = ("stacked", pid, self.rt.index_version)
+                if pool.derived_hit(lease, dkey):
+                    setup_s = 0.0
+                    self.dre.derived_hits += 1
+                else:
+                    pool.retain_derived(lease, dkey)
+            raw, linfo = self.transport.submit(
+                f"qp:{pid}", request=creq, extra={}).result()
+            resp, counters = raw
+            measured = linfo.compute_s
+            t1 = time.perf_counter()
+        t_avail = t_start + fetch_s + setup_s
         compute_s = measured if cfg.qp_compute_s is None else cfg.qp_compute_s
         t_end = t_avail + compute_s
 
@@ -628,18 +871,20 @@ class _Execution:
                                      max_bytes=cfg.max_payload_bytes,
                                      policy=cfg.overflow)
         t_end += (n_pages - 1) * cfg.invoke_latency_warm_s
+        nq = int(resp["qidx"].shape[0])
         self.nodes.append(NodeTrace(
             node=f"qp:{pid}", kind="qp", parent=parent, chunk=ci,
             t_issue=t_issue, t_start=t_start, t_end=t_end,
-            invoke_s=inv, fetch_s=lease.fetch_s, compute_s=compute_s,
+            invoke_s=inv, fetch_s=fetch_s, compute_s=compute_s,
             request_bytes=req_bytes, response_bytes=len(rbuf),
-            warm=lease.warm, dre_hit=lease.dre_hit,
-            queries=int(creq["qidx"].shape[0]),
-            own_queries=int(creq["qidx"].shape[0]),
+            warm=warm, dre_hit=hit,
+            queries=nq, own_queries=nq,
             response_chunks=n_pages, setup_s=setup_s,
             hamming_in=counters["hamming_in"],
             hamming_kept=counters["hamming_kept"],
-            adc_evals=counters["adc_evals"]))
-        self.loop.at(t_end, lambda: self.rt.qp_pools[pid].release(lease))
+            adc_evals=counters["adc_evals"],
+            **self._wall_kw(winfo, t0, t1)))
+        if lease is not None:
+            self.loop.at(t_end, lambda: self.rt.qp_pools[pid].release(lease))
         self.loop.at(t_end + self._tx(len(rbuf)),
-                     lambda: respond_chunk(resp))
+                     lambda: respond_chunk(ci, resp))

@@ -44,6 +44,18 @@ class NodeTrace:
     response_chunks: int = 1  # >1 → response exceeded the cap and paginated
     cache_hits: int = 0       # CO only: queries served from the §5.6 cache
     setup_s: float = 0.0      # QP derived-state build (0 on a retained hit)
+    # Measured wall-clock twin of the modeled timeline (seconds relative to
+    # the run's submit instant). Under LocalTransport these record where the
+    # host actually spent time executing the virtual schedule; under
+    # ProcessTransport they are the *real* distributed execution — submit →
+    # wire → worker handler → response — so ``RunTrace`` can report modeled
+    # vs measured side by side.
+    wall_issue_s: float = 0.0
+    wall_start_s: float = 0.0
+    wall_end_s: float = 0.0
+    wall_compute_s: float = 0.0
+    worker_pid: int = 0       # OS pid of the serving worker (host pid local)
+    retries: int = 0          # re-invocations after worker crashes
     # QP pruning accounting (0 for CO/QA nodes): candidates entering the
     # Hamming stage, survivors of it, and ADC table evaluations — the knob
     # the autotune profile turns, so the §3.5 cost fold can attribute
@@ -75,6 +87,9 @@ class RunTrace:
     cost: Optional[Dict] = None
     cache_hits: int = 0       # queries served from the §5.6 result cache
     cache_misses: int = 0     # queries that traversed the Alg. 2 tree
+    transport: str = "local"  # which Transport backend executed the run
+    measured_makespan_s: float = 0.0   # real wall-clock of the whole search
+    worker_retries: int = 0   # Σ re-invocations after worker crashes
 
     @property
     def payload_bytes(self) -> int:
@@ -104,6 +119,8 @@ def assemble_run_trace(
     prices: PricingConstants,
     cache_hits: int = 0,
     cache_misses: int = 0,
+    transport: str = "local",
+    measured_makespan_s: float = 0.0,
 ) -> RunTrace:
     """Fold node traces into fleet inputs and the Eqs. 3–8 breakdown."""
     t_qa = sum(n.billed_s for n in nodes if n.kind == "qa")
@@ -136,4 +153,7 @@ def assemble_run_trace(
         cost=squash_query_cost(fleet, prices),
         cache_hits=cache_hits,
         cache_misses=cache_misses,
+        transport=transport,
+        measured_makespan_s=measured_makespan_s,
+        worker_retries=sum(n.retries for n in nodes),
     )

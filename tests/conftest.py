@@ -57,6 +57,10 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers",
         "multidevice: spawns subprocesses with XLA host-device meshes")
+    config.addinivalue_line(
+        "markers",
+        "transport: spawns ProcessTransport worker processes (run in CI "
+        "under a hard timeout; deselect with -m 'not transport')")
 
 
 _AUTO_MARKS = {
@@ -64,6 +68,7 @@ _AUTO_MARKS = {
     "test_distributed": ("slow",),
     "test_system": ("slow",),
     "test_archs": ("slow",),
+    "test_transport": ("transport",),
 }
 
 

@@ -187,6 +187,29 @@ def test_container_pool_derived_state_retention():
     assert pool.stats.derived_hits == 1
 
 
+def test_container_pool_stale_lease_cannot_resurrect_derived_state():
+    """Regression (lease accounting): a lease still in flight when
+    ``clear_derived()`` runs (invalidate_cache/swap_index) must not re-add
+    derived state on its way out — the resurrected entry would be keyed to a
+    dead index_version and leak forever, and a buggy version-less key would
+    be served as a false hit for the new index."""
+    pool = dre.ContainerPool(warm_prob=1.0, seed=0)
+    stale = pool.acquire("ds/p0", 1000)
+    pool.retain_derived(stale, ("stacked", 0, 0))
+    pool.clear_derived()                      # invalidation while leased
+    pool.retain_derived(stale, ("stacked", 0, 0))   # in-flight retain: dropped
+    pool.release(stale)
+    fresh = pool.acquire("ds/p0", 1000)
+    assert fresh.container_id == stale.container_id
+    assert not pool.derived_hit(fresh, ("stacked", 0, 0)), (
+        "stale lease resurrected cleared derived state")
+    # the new-epoch lease retains normally
+    pool.retain_derived(fresh, ("stacked", 0, 1))
+    pool.release(fresh)
+    again = pool.acquire("ds/p0", 1000)
+    assert pool.derived_hit(again, ("stacked", 0, 1))
+
+
 # ----------------------------------------------------------------- cost model
 
 def test_cost_model_components():
@@ -581,6 +604,21 @@ def test_qp_derived_state_retention_in_runtime(built):
     r_off = off.search(ds.queries, preds, k=10)
     assert r_off.trace.dre.derived_hits == 0
     assert all(n.setup_s > 0 for n in r_off.trace.nodes if n.kind == "qp")
+
+
+def test_invalidate_cache_resets_derived_retention(built):
+    """Runtime-level twin of the stale-lease regression: after
+    ``invalidate_cache()`` the next wave re-pays QP setup on every container
+    (no resurrected derived state), then retention resumes normally."""
+    ds, preds, index = built
+    rt = _runtime(index, warm_prob=1.0)
+    rt.search(ds.queries, preds, k=10)
+    rt.invalidate_cache()
+    r = rt.search(ds.queries, preds, k=10)
+    assert r.trace.dre.derived_hits == 0
+    assert all(n.setup_s > 0 for n in r.trace.nodes if n.kind == "qp")
+    r2 = rt.search(ds.queries, preds, k=10)
+    assert r2.trace.dre.derived_hits == r2.trace.invocations("qp") > 0
 
 
 def test_service_cache_config_and_invalidation_on_rebuild(built):
