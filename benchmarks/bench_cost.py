@@ -11,8 +11,9 @@ serverless cheaper until ~1M–3.5M queries/day.
 
 Since PR 5 the bench leads with a modeled-vs-measured latency comparison:
 the same warm wave under the virtual-time LocalTransport (modeled makespan)
-and under the real multi-process ProcessTransport (measured wall-clock),
-persisted under ``modeled_vs_measured`` in the saved JSON.
+and under the real worker substrates — multi-process ProcessTransport and
+the TCP SocketTransport fleet (measured wall-clock) — persisted under
+``modeled_vs_measured`` in the saved JSON.
 """
 
 from __future__ import annotations
@@ -45,10 +46,11 @@ def _modeled_vs_measured_latency() -> dict:
 
     The same small fleet runs once under LocalTransport (virtual clock: QP
     busy time pinned to the injected sleep, concurrency modeled by
-    staggered launch) and once under ProcessTransport (the sleep actually
-    elapses inside real worker processes, concurrently). Both warm waves are
-    compared: the modeled makespan prices the fleet, the measured one is
-    what a client would clock.
+    staggered launch) and once under each real substrate — ProcessTransport
+    (pipes) and SocketTransport (TCP, auto-spawned loopback hosts) — where
+    the sleep actually elapses inside real workers, concurrently. All warm
+    waves are compared: the modeled makespan prices the fleet, the measured
+    ones are what a client would clock over each wire.
     """
     from benchmarks.common import build_tiny_squash_index
     from repro.serverless import RuntimeConfig, ServerlessRuntime
@@ -60,20 +62,27 @@ def _modeled_vs_measured_latency() -> dict:
         branching=2, max_level=1, qp_compute_s=sleep))
     local.search(ds.queries, preds, k=10)
     t_local = local.search(ds.queries, preds, k=10).trace
-    proc = ServerlessRuntime(idx, RuntimeConfig(
-        branching=2, max_level=1, transport="process", qa_workers=1,
-        worker_sleep_s=sleep))
-    try:
-        proc.search(ds.queries, preds, k=10)      # cold: build worker state
-        t_proc = proc.search(ds.queries, preds, k=10).trace
-    finally:
-        proc.close()
+
+    def real_wave(transport):
+        rt = ServerlessRuntime(idx, RuntimeConfig(
+            branching=2, max_level=1, transport=transport, qa_workers=1,
+            worker_sleep_s=sleep))
+        try:
+            rt.search(ds.queries, preds, k=10)    # cold: build worker state
+            return rt.search(ds.queries, preds, k=10).trace
+        finally:
+            rt.close()
+
+    t_proc = real_wave("process")
+    t_sock = real_wave("socket")
     return {
         "qp_busy_s": sleep,
         "qp_invocations": t_proc.invocations("qp"),
         "modeled_local_s": t_local.makespan_s,
         "modeled_process_s": t_proc.makespan_s,
         "measured_process_s": t_proc.measured_makespan_s,
+        "measured_socket_s": t_sock.measured_makespan_s,
+        "socket_hosts": t_sock.worker_hosts,
         "cost_modeled_local": t_local.cost["total"],
         "cost_modeled_process": t_proc.cost["total"],
     }
@@ -123,7 +132,9 @@ def run(quick: bool = True) -> dict:
           f"{lat['qp_busy_s']:.2f}s busy): modeled local "
           f"{lat['modeled_local_s']:.3f}s / modeled process "
           f"{lat['modeled_process_s']:.3f}s / MEASURED process "
-          f"{lat['measured_process_s']:.3f}s")
+          f"{lat['measured_process_s']:.3f}s / MEASURED socket "
+          f"{lat['measured_socket_s']:.3f}s "
+          f"({len(lat['socket_hosts'])} hosts)")
     tune = _autotune_adc_savings()
     print(f"  autotuned keep budgets: ADC evals {tune['adc_static']} → "
           f"{tune['adc_tuned']} ({tune['adc_savings']:.0%} fewer), "

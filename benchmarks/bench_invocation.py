@@ -8,13 +8,14 @@ busy times are pinned so the comparison isolates invocation structure; the
 first wave runs cold (empty container pools), the second warm.
 
 Since PR 5 the bench also sweeps the *transport*: the same choreography
-runs once under the virtual-time LocalTransport (modeled makespan) and once
-under the real multi-process ProcessTransport (measured wall-clock), tree
-vs sequential, with an injected per-QP busy-sleep standing in for heavy
-Stage 3–5 work. That yields the first measured (not modeled) data points of
-the perf trajectory: real concurrent QP waves beating the serialized
-strawman on the same worker fleet. Results persist as
-``results/BENCH_invocation.json`` via ``benchmarks/run.py``.
+runs under the virtual-time LocalTransport (modeled makespan) and under the
+real worker substrates — multi-process pipes and the TCP socket fleet —
+measured wall-clock, tree vs sequential, with an injected per-QP busy-sleep
+standing in for heavy Stage 3–5 work. That yields measured (not modeled)
+data points of the perf trajectory: real concurrent QP waves beating the
+serialized strawman on the same worker fleet, over pipes and over TCP.
+Results persist as ``results/BENCH_invocation.json`` via
+``benchmarks/run.py``.
 """
 
 from __future__ import annotations
@@ -61,42 +62,51 @@ def _virtual_sweep(quick: bool, ds, preds, idx) -> list:
 
 
 def _transport_sweep(ds, preds, idx) -> list:
-    """Measured wall-clock: ProcessTransport tree vs sequential strawman."""
+    """Measured wall-clock: real-worker transports, tree vs sequential.
+
+    Sweeps both real substrates — process pipes and the TCP socket fleet —
+    so the persisted results carry a measured socket column next to the
+    process one. Within each transport the concurrent tree launch must beat
+    the sequential strawman on the same fleet.
+    """
     from repro.serverless import RuntimeConfig, ServerlessRuntime
 
     rows = []
-    for mode, sequential in (("tree", False), ("sequential", True)):
-        rt = ServerlessRuntime(idx, RuntimeConfig(
-            branching=2, max_level=1, sequential=sequential,
-            transport="process", qa_workers=1,
-            worker_sleep_s=_SWEEP_SLEEP_S))
-        try:
-            t0 = time.perf_counter()
-            cold = rt.search(ds.queries, preds, k=10)
-            cold_s = time.perf_counter() - t0
-            warm = rt.search(ds.queries, preds, k=10)
-        finally:
-            rt.close()
-        rows.append({
-            "mode": mode,
-            "transport": "process",
-            "qp_invocations": warm.trace.invocations("qp"),
-            "qp_busy_sleep_s": _SWEEP_SLEEP_S,
-            "measured_cold_s": cold_s,
-            "measured_warm_s": warm.trace.measured_makespan_s,
-            "modeled_warm_s": warm.trace.makespan_s,
-        })
-        print(f"  process/{mode:<10s} measured warm="
-              f"{warm.trace.measured_makespan_s:.3f}s "
-              f"(modeled {warm.trace.makespan_s:.3f}s, "
-              f"{warm.trace.invocations('qp')} QPs x "
-              f"{_SWEEP_SLEEP_S:.2f}s busy)")
-    tree_s = rows[0]["measured_warm_s"]
-    seq_s = rows[1]["measured_warm_s"]
-    assert tree_s < seq_s, (
-        f"concurrent QP wave ({tree_s:.3f}s) must beat the sequential "
-        f"strawman ({seq_s:.3f}s) in *measured* wall-clock")
-    print(f"  measured tree speedup over sequential: {seq_s / tree_s:.1f}x")
+    for transport in ("process", "socket"):
+        for mode, sequential in (("tree", False), ("sequential", True)):
+            rt = ServerlessRuntime(idx, RuntimeConfig(
+                branching=2, max_level=1, sequential=sequential,
+                transport=transport, qa_workers=1,
+                worker_sleep_s=_SWEEP_SLEEP_S))
+            try:
+                t0 = time.perf_counter()
+                cold = rt.search(ds.queries, preds, k=10)
+                cold_s = time.perf_counter() - t0
+                warm = rt.search(ds.queries, preds, k=10)
+            finally:
+                rt.close()
+            rows.append({
+                "mode": mode,
+                "transport": transport,
+                "qp_invocations": warm.trace.invocations("qp"),
+                "qp_busy_sleep_s": _SWEEP_SLEEP_S,
+                "measured_cold_s": cold_s,
+                "measured_warm_s": warm.trace.measured_makespan_s,
+                "modeled_warm_s": warm.trace.makespan_s,
+                "worker_hosts": warm.trace.worker_hosts,
+            })
+            print(f"  {transport}/{mode:<10s} measured warm="
+                  f"{warm.trace.measured_makespan_s:.3f}s "
+                  f"(modeled {warm.trace.makespan_s:.3f}s, "
+                  f"{warm.trace.invocations('qp')} QPs x "
+                  f"{_SWEEP_SLEEP_S:.2f}s busy)")
+        tree_s, seq_s = (rows[-2]["measured_warm_s"],
+                         rows[-1]["measured_warm_s"])
+        assert tree_s < seq_s, (
+            f"{transport}: concurrent QP wave ({tree_s:.3f}s) must beat the "
+            f"sequential strawman ({seq_s:.3f}s) in *measured* wall-clock")
+        print(f"  {transport}: measured tree speedup over sequential: "
+              f"{seq_s / tree_s:.1f}x")
     return rows
 
 
@@ -108,7 +118,7 @@ def run(quick: bool = True) -> dict:
         "tree launch must beat sequential fan-out on large fleets"
     assert all(r["tree_cold_s"] >= r["tree_warm_s"] for r in rows), \
         "cold fleet cannot be faster than warm"
-    header("Transport sweep — measured wall-clock, process workers")
+    header("Transport sweep — measured wall-clock, process + socket fleets")
     ds4, preds4, idx4 = build_tiny_squash_index(seed=3, num_partitions=4)
     transport_rows = _transport_sweep(ds4, preds4, idx4)
     payload = {"rows": rows, "transport": transport_rows}

@@ -118,6 +118,30 @@ def smoke() -> int:
     finally:
         rt_proc.close()
 
+    # Socket-parity gate: the same choreography again, this time over the
+    # TCP worker fleet (auto-spawned loopback hosts, length-prefixed codec
+    # frames, heartbeats). Ids and stats must stay bitwise-identical, every
+    # served node must report the host:port that ran it, and the smoke wave
+    # must complete with zero reconnect-driven retries.
+    rt_sock = ServerlessRuntime(idx, RuntimeConfig(
+        branching=2, max_level=1, transport="socket", qa_workers=1,
+        invoke_timeout_s=120.0))
+    try:
+        res_s = rt_sock.search(ds.queries, preds, k=10)
+        assert np.array_equal(res_s.ids, ids_j), "socket-transport ids diverged"
+        assert res_s.stats == stats_j, (
+            f"socket-transport stats drift: {res_s.stats} vs {stats_j}")
+        ts = res_s.trace
+        assert ts.transport == "socket" and ts.measured_makespan_s > 0
+        assert ts.worker_retries == 0, "socket links dropped during smoke wave"
+        assert ts.worker_hosts, "socket trace must carry worker hosts"
+        assert all(n.worker_host for n in ts.nodes if n.kind != "co"), (
+            "served socket QA/QP nodes must record their host")
+        warm_s = rt_sock.search(ds.queries, preds, k=10).trace
+        assert warm_s.dre.s3_gets == 0, "live socket hosts must serve warm"
+    finally:
+        rt_sock.close()
+
     # §5.6 result-cache gate: with the cache enabled, both the cold pass and
     # the fully-repeated pass must stay bitwise-identical to the jax plane,
     # while the repeat pass shows strictly fewer invocations, payload bytes
@@ -156,9 +180,11 @@ def smoke() -> int:
 
     print(f"[smoke] OK in {time.time() - t0:.1f}s — recall@10="
           f"{recalls['jax']:.3f}, ids identical across numpy/jax/serverless"
-          f" (±cache, local AND process transport; process measured "
-          f"{tp.measured_makespan_s:.2f}s cold / "
-          f"{warm_p.measured_makespan_s:.2f}s warm); runtime: "
+          f" (±cache, local AND process AND socket transport; process "
+          f"measured {tp.measured_makespan_s:.2f}s cold / "
+          f"{warm_p.measured_makespan_s:.2f}s warm; socket measured "
+          f"{ts.measured_makespan_s:.2f}s cold over "
+          f"{len(ts.worker_hosts)} host(s)); runtime: "
           f"{tr.invocations('qa')} QA + "
           f"{tr.invocations('qp')} QP, ${tr.cost['total']:.6f}/batch; "
           f"cached repeat: {len(t2.nodes)} invocation(s), "

@@ -10,7 +10,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
-__all__ = ["PricingConstants", "LambdaFleet", "squash_query_cost", "server_baseline_cost"]
+__all__ = ["PricingConstants", "LambdaFleet", "squash_query_cost",
+           "server_baseline_cost", "daily_cost_curve"]
 
 
 @dataclasses.dataclass(frozen=True)

@@ -130,7 +130,15 @@ class ContainerPool:
                      fetch_s=fetch_s, stats=delta, epoch=self._epoch)
 
     def release(self, lease: Lease) -> None:
-        self._free.append(lease.container_id)
+        """Return the lease's container to the free pool (idempotent).
+
+        Guarded against double-release: without the check the same
+        ``container_id`` entered ``_free`` twice and two concurrent leases
+        were handed the *same* container — their warm/DRE accounting then
+        described one singleton serving two in-flight invocations at once.
+        """
+        if lease.container_id not in self._free:
+            self._free.append(lease.container_id)
 
     def invoke(self, data_key: Hashable, data_bytes: int, use_dre: bool = True
                ) -> Tuple[bool, bool]:
@@ -214,6 +222,7 @@ class ResultCache:
         self.misses = 0
         self.evictions = 0
         self.invalidations = 0
+        self.oversize_skips = 0   # puts dropped for exceeding the whole budget
 
     @staticmethod
     def query_key(query_vec) -> bytes:
@@ -249,11 +258,17 @@ class ResultCache:
 
     def put(self, key: Hashable, value: object) -> None:
         nbytes = _entry_nbytes(key, value)
+        if self.max_bytes is not None and nbytes > self.max_bytes:
+            # Larger than the whole budget: never admitted — and checked
+            # *before* touching the store, so an existing entry under the
+            # same key survives (the old order evicted it first and then
+            # cached nothing, silently losing a live entry). The drop is
+            # visible in ``oversize_skips``.
+            self.oversize_skips += 1
+            return
         if key in self._store:
             self.current_bytes -= self._sizes.pop(key)
             del self._store[key]
-        if self.max_bytes is not None and nbytes > self.max_bytes:
-            return                          # larger than the whole budget
         self._store[key] = value
         self._sizes[key] = nbytes
         self.current_bytes += nbytes

@@ -59,9 +59,12 @@ class ServiceConfig:
     result_cache_bytes: int = 64 * 1024 * 1024
     # Execution substrate of the serverless backend (serverless.transport):
     # None keeps the RuntimeConfig's choice; "local" pins the in-process
-    # virtual-time scheduler, "process" the real multi-process worker pool
-    # (ids bitwise-identical either way).
+    # virtual-time scheduler, "process" the real multi-process worker pool,
+    # "socket" the TCP worker fleet (ids bitwise-identical in every case).
     transport: Optional[str] = None
+    # Socket-transport host fleet ("host:port", ...). None keeps the
+    # RuntimeConfig's choice (auto-spawned loopback hosts by default).
+    hosts: Optional[Tuple[str, ...]] = None
     # Recall-targeted Hamming autotune (core/autotune.py). When set, the
     # service calibrates a per-partition keep-budget profile against the
     # bound index (and re-calibrates on ``swap_index``); every backend —
@@ -122,6 +125,9 @@ class VectorSearchService:
                     and cfg.transport != self.config.transport):
                 cfg = dataclasses.replace(cfg,
                                           transport=self.config.transport)
+            if (self.config.hosts is not None
+                    and cfg.hosts != self.config.hosts):
+                cfg = dataclasses.replace(cfg, hosts=self.config.hosts)
             self._runtime = ServerlessRuntime(self.index, cfg)
         return self._runtime
 

@@ -14,6 +14,15 @@ encoded size, with an explicit overflow policy:
   the runtime how many pages to bill as warm round-trips.
 
 A payload that cannot be split further (a single query) always raises.
+
+The module also defines the **length-prefixed frame protocol** the socket
+transport speaks over TCP (``serverless.socket_transport`` on the client
+side, ``repro.serverless.host`` on the server side): one frame = a 1-byte
+kind tag + a little-endian uint32 body length + the body. Request/response
+frames carry ``encode_message`` bytes and are held to the same 6 MB budget
+the in-process hops model; INIT frames carry the function *deployment* (the
+pickled ``WorkerInit`` bundle — the analogue of the S3 code package, not a
+synchronous invocation payload) and are budget-exempt.
 """
 
 from __future__ import annotations
@@ -30,6 +39,8 @@ __all__ = [
     "MAX_SYNC_PAYLOAD_BYTES", "OVERFLOW_POLICIES", "PayloadOverflowError",
     "encode_message", "decode_message", "chunk_request", "response_chunks",
     "predicates_to_json", "predicates_from_json",
+    "FRAME_INIT", "FRAME_REQ", "FRAME_RESP", "FRAME_PING", "FRAME_PONG",
+    "FRAME_SHUTDOWN", "write_frame", "read_frame",
 ]
 
 # AWS Lambda request/response limit for synchronous invocations (6 MB).
@@ -152,6 +163,56 @@ def response_chunks(nbytes: int, *, max_bytes: int, policy: str) -> int:
             f"response payload of {nbytes} B exceeds the {max_bytes} B budget "
             "(overflow policy 'error')")
     return -(-nbytes // max_bytes)
+
+
+# ------------------------------------------------------------ socket frames
+
+FRAME_INIT = b"I"       # function deployment: pickled WorkerInit (no budget)
+FRAME_REQ = b"Q"        # one invocation request (codec body; budgeted)
+FRAME_RESP = b"R"       # one invocation response page (codec body; budgeted)
+FRAME_PING = b"P"       # client liveness probe (hang guard)
+FRAME_PONG = b"O"       # host heartbeat / deploy-ack / ping answer
+FRAME_SHUTDOWN = b"X"   # close this worker connection cleanly
+
+_FRAME_HEADER = struct.Struct("<cI")
+
+# REQ/RESP frames wrap the budgeted invocation payload in a small codec
+# envelope (rid, extra, pagination fields); the per-frame cap allows the
+# envelope this much headroom so the *inner* payload is held to exactly the
+# Lambda budget, with no double-counting of wrapper bytes.
+FRAME_SLACK = 64 * 1024
+
+
+def write_frame(sock, kind: bytes, body: bytes = b"", *,
+                max_bytes: int = None) -> None:
+    """Send one length-prefixed frame; caller serializes access to ``sock``.
+
+    ``max_bytes`` applies the per-frame payload budget at the socket layer
+    itself — an over-budget body raises :class:`PayloadOverflowError` before
+    any byte hits the wire, so a mis-chunked request can never sneak past
+    the Lambda-style cap just because it travels over TCP.
+    """
+    if max_bytes is not None and len(body) > max_bytes:
+        raise PayloadOverflowError(
+            f"socket frame body of {len(body)} B exceeds the "
+            f"{max_bytes} B per-frame budget")
+    sock.sendall(_FRAME_HEADER.pack(kind, len(body)) + body)
+
+
+def _recv_exact(sock, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise ConnectionError("socket closed mid-frame")
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+def read_frame(sock) -> Tuple[bytes, bytes]:
+    """Receive one frame → ``(kind, body)``; raises ConnectionError on EOF."""
+    kind, length = _FRAME_HEADER.unpack(_recv_exact(sock, _FRAME_HEADER.size))
+    return kind, _recv_exact(sock, length)
 
 
 def predicates_to_json(predicates: Sequence[Predicate]) -> List[Dict]:

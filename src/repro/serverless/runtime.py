@@ -37,10 +37,18 @@ Since PR 5 the *execution substrate* is pluggable
   *modeled* §3.5 timeline is still assembled — with measured handler/fetch
   times folded in — and ``RunTrace.measured_makespan_s`` plus the per-node
   ``wall_*`` fields report the real clock next to it.
+* ``"socket"`` — same worker bodies, but each one lives behind a TCP
+  connection to a ``repro.serverless.host`` process
+  (``serverless.socket_transport``): pass ``hosts=("10.0.0.5:7070", ...)``
+  to spread the QA/QP fleet across machines, or let the runtime auto-spawn
+  loopback hosts. Connection loss is handled like a worker crash —
+  heartbeat-guarded detection, reconnect with backoff, bounded
+  re-invocation — and ``NodeTrace.worker_host`` records who served what.
 
 Parity contract: for the same index/queries/predicates/k, the returned ids
 are **bitwise identical** across ``transport="local"``,
-``transport="process"`` and ``SquashIndex.search(backend="jax")`` — every
+``transport="process"``, ``transport="socket"`` and
+``SquashIndex.search(backend="jax")`` — every
 substrate runs the same jitted plane over the same partition slices, and
 the ascending-partition stable merge reproduces the reference tie-breaking.
 The aggregate :class:`~repro.core.pipeline.SearchStats` match exactly too,
@@ -54,7 +62,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -82,11 +90,15 @@ class RuntimeConfig:
     sequential: bool = False           # CO-invokes-everything strawman (Fig. 7)
 
     # Execution substrate (serverless.transport).
-    transport: str = "local"           # "local" | "process"
-    qa_workers: int = 2                # allocator-function pool size (process)
+    transport: str = "local"           # "local" | "process" | "socket"
+    qa_workers: int = 2                # allocator-function pool size (real)
     worker_start_method: str = "spawn"  # multiprocessing start method
-    invoke_timeout_s: float = 180.0    # per-invocation hang guard (process)
+    invoke_timeout_s: float = 180.0    # per-invocation hang guard (real)
     max_worker_retries: int = 2        # re-invocations after a worker crash
+    hosts: Optional[Tuple[str, ...]] = None  # socket: "host:port" fleet; None
+                                             # auto-spawns loopback hosts
+    auto_hosts: int = 2                # loopback hosts when hosts is None
+    heartbeat_s: float = 0.25          # socket link liveness probe interval
     worker_sleep_s: float = 0.0        # injected QueryProcessor busy-sleep —
                                        # emulates heavyweight Stage 3–5 work
                                        # so concurrency benches/tests measure
@@ -250,12 +262,24 @@ class ServerlessRuntime:
         return self.cfg.transport == "process"
 
     @property
+    def is_socket(self) -> bool:
+        return self.cfg.transport == "socket"
+
+    @property
+    def is_real(self) -> bool:
+        """Real workers behind a boundary (process pipes or TCP links), as
+        opposed to the modeled inline LocalTransport."""
+        return self.cfg.transport != "local"
+
+    @property
     def transport(self) -> tp.Transport:
-        """The execution substrate, built lazily (process workers are
+        """The execution substrate, built lazily (real workers are
         long-lived across searches — that is what makes DRE warm hits real)."""
         if self._transport is None:
             if self.is_process:
                 self._transport = self._build_process_transport()
+            elif self.is_socket:
+                self._transport = self._build_socket_transport()
             else:
                 self._transport = tp.LocalTransport(self._local_handlers())
         return self._transport
@@ -271,7 +295,9 @@ class ServerlessRuntime:
 
         return {"qa": qa, "qp": qp}
 
-    def _build_process_transport(self) -> tp.ProcessTransport:
+    def _worker_inits(self) -> Dict:
+        """Function → (WorkerInit, pool size): the fleet's deployment map,
+        shared by the process and socket substrates."""
         import jax
 
         cfg = self.cfg
@@ -290,12 +316,33 @@ class ServerlessRuntime:
                               bundle=wk.build_qp_bundle(self.index, pid,
                                                         self._dtype)),
                 1)
+        return inits
+
+    def _build_process_transport(self) -> tp.ProcessTransport:
+        cfg = self.cfg
         return tp.ProcessTransport(
-            inits,
+            self._worker_inits(),
             eager=not cfg.sequential,
             start_method=cfg.worker_start_method,
             invoke_timeout_s=cfg.invoke_timeout_s,
             max_retries=cfg.max_worker_retries)
+
+    def _build_socket_transport(self):
+        # Imported lazily so the TCP machinery never loads for in-process
+        # runs (and LocalTransport stays importable with no socket support).
+        from repro.serverless.socket_transport import SocketTransport
+
+        cfg = self.cfg
+        return SocketTransport(
+            self._worker_inits(),
+            hosts=cfg.hosts,
+            auto_hosts=cfg.auto_hosts,
+            eager=not cfg.sequential,
+            start_method=cfg.worker_start_method,
+            invoke_timeout_s=cfg.invoke_timeout_s,
+            max_retries=cfg.max_worker_retries,
+            max_payload_bytes=cfg.max_payload_bytes,
+            heartbeat_s=cfg.heartbeat_s)
 
     def close(self) -> None:
         """Shut down the transport (terminates process workers)."""
@@ -423,7 +470,7 @@ class _Execution:
         self.rt = rt
         self.cfg = rt.cfg
         self.transport = rt.transport
-        self.process = rt.is_process
+        self.real = rt.is_real        # process or socket workers (not inline)
         self.loop = EventLoop()
         self.qn = qn
         self.k = k
@@ -478,18 +525,20 @@ class _Execution:
     def _wall_kw(self, info: Optional[tp.InvokeInfo],
                  t0: float, t1: float) -> Dict:
         """NodeTrace measured-wall fields, relative to the run submit."""
-        if info is not None and self.process:
+        if info is not None and self.real:
             return dict(wall_issue_s=info.wall_submit - self.wall0,
                         wall_start_s=info.wall_sent - self.wall0,
                         wall_end_s=info.wall_done - self.wall0,
                         wall_compute_s=info.compute_s,
                         worker_pid=info.os_pid,
+                        worker_host=info.host,
                         retries=info.retries)
         return dict(wall_issue_s=t0 - self.wall0,
                     wall_start_s=t0 - self.wall0,
                     wall_end_s=t1 - self.wall0,
                     wall_compute_s=t1 - t0,
                     worker_pid=os.getpid(),
+                    worker_host="",
                     retries=0)
 
     # ------------------------------------------------------------------ run
@@ -564,7 +613,7 @@ class _Execution:
                 # The Coordinator runs where the runtime lives (it fronts
                 # the client); its empty own-slice plan is computed inline.
                 warm, hit, fetch_s = True, False, 0.0
-            elif self.process:
+            elif self.real:
                 pinv = self.transport.submit(
                     "qa", payload=buf, extra={"olo": olo, "ohi": ohi})
                 warm = pinv.predicted_warm
@@ -639,7 +688,7 @@ class _Execution:
         winfo = None
         if kind == "co":
             presp = wk.qa_compute(self.rt.allocator, creq, olo, ohi)
-        elif self.process:
+        elif self.real:
             raw, winfo = pinv.result()
             presp = wk.unpack_plan_response(raw)
             warm, hit, fetch_s = winfo.warm, winfo.state_hit, winfo.fetch_s
@@ -649,7 +698,7 @@ class _Execution:
                 "qa", request=creq, extra={"olo": olo, "ohi": ohi})
             presp, winfo = pinv.result()
         t1 = time.perf_counter()
-        measured = (winfo.compute_s if (self.process and winfo is not None)
+        measured = (winfo.compute_s if (self.real and winfo is not None)
                     else t1 - t0)
         fixed = cfg.co_compute_s if kind == "co" else cfg.qa_compute_s
         compute_s = measured if fixed is None else fixed
@@ -789,7 +838,7 @@ class _Execution:
 
         for ci, (creq, buf) in enumerate(chunks):
             pinv, lease = None, None
-            if self.process:
+            if self.real:
                 pinv = self.transport.submit(
                     f"qp:{pid}", payload=buf,
                     extra={"sleep_s": cfg.worker_sleep_s})
@@ -819,7 +868,7 @@ class _Execution:
     ) -> None:
         cfg = self.cfg
         t0 = time.perf_counter()
-        if self.process:
+        if self.real:
             raw, winfo = pinv.result()
             resp, counters = wk.unpack_qp_response(raw)
             warm, hit, fetch_s = winfo.warm, winfo.state_hit, winfo.fetch_s

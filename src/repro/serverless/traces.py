@@ -55,6 +55,7 @@ class NodeTrace:
     wall_end_s: float = 0.0
     wall_compute_s: float = 0.0
     worker_pid: int = 0       # OS pid of the serving worker (host pid local)
+    worker_host: str = ""     # "host:port" that served it (socket transport)
     retries: int = 0          # re-invocations after worker crashes
     # QP pruning accounting (0 for CO/QA nodes): candidates entering the
     # Hamming stage, survivors of it, and ADC table evaluations — the knob
@@ -102,6 +103,11 @@ class RunTrace:
 
     def invocations(self, kind: Optional[str] = None) -> int:
         return sum(1 for n in self.nodes if kind is None or n.kind == kind)
+
+    @property
+    def worker_hosts(self) -> List[str]:
+        """Distinct hosts that served this run (socket transport; else [])."""
+        return sorted({n.worker_host for n in self.nodes if n.worker_host})
 
 
 def assemble_run_trace(

@@ -47,7 +47,10 @@ from repro.serverless import workers as wk
 __all__ = ["TransportError", "InvokeInfo", "Transport", "LocalTransport",
            "ProcessTransport", "TRANSPORTS"]
 
-TRANSPORTS = ("local", "process")
+# Backend registry: "socket" is implemented by
+# serverless.socket_transport.SocketTransport (imported lazily by the
+# runtime so the TCP machinery never loads for in-process runs).
+TRANSPORTS = ("local", "process", "socket")
 
 
 class TransportError(RuntimeError):
@@ -74,6 +77,7 @@ class InvokeInfo:
     wall_submit: float
     wall_sent: float
     wall_done: float
+    host: str = ""       # "host:port" that served it (SocketTransport only)
 
 
 class Transport:
@@ -212,11 +216,27 @@ class _ProcessInvocation:
         if not p.sent and not p.resolved:
             t._send(p)                       # lazy (sequential) mode
         if not p.event.wait(t.invoke_timeout_s):
-            with t._lock:                    # forget it: a late response is
-                t._pending.pop(p.rid, None)  # dropped by _drain, not leaked
-            raise TransportError(
-                f"invocation of {p.fn!r} timed out after "
-                f"{t.invoke_timeout_s:.0f}s (worker pool hung?)")
+            timed_out = False
+            with t._lock:
+                # Re-check under the lock: the response may have landed
+                # between the wait expiring and us acquiring the lock.
+                if not p.resolved:
+                    # Forget it AND rebalance its worker: dropping only the
+                    # pending left ``assigned`` permanently inflated, so the
+                    # least-loaded routing shunned a hung worker forever
+                    # (even after it recovered) — and a late response was
+                    # double-booked into ``done`` for a request nobody
+                    # awaits, skewing inflight negative.
+                    t._pending.pop(p.rid, None)
+                    if p.worker is not None:
+                        p.worker.assigned -= 1
+                    if p.sent:
+                        t._timed_out[p.rid] = p.worker
+                    timed_out = True
+            if timed_out:
+                raise TransportError(
+                    f"invocation of {p.fn!r} timed out after "
+                    f"{t.invoke_timeout_s:.0f}s (worker pool hung?)")
         if p.error is not None:
             raise p.error
         data, winfo = p.value
@@ -255,6 +275,8 @@ class ProcessTransport(Transport):
         self._rid = itertools.count()
         self._lock = threading.Lock()
         self._pending: Dict[int, _Pending] = {}
+        self._timed_out: Dict[int, _Worker] = {}  # dropped on timeout; a late
+                                                  # response must not re-book
         self._dead_births: Dict[str, int] = {}   # consecutive dead spawns
         self._respawning: Dict[str, int] = {}    # replacements being spawned
         self._closed = False
@@ -272,12 +294,16 @@ class ProcessTransport(Transport):
     def submit(self, fn, *, request=None, payload=None, extra=None):
         if payload is None:
             payload = pl.encode_message(request)
-        if self._closed:
-            raise TransportError("transport is closed")
         pending = _Pending(next(self._rid), fn, payload, dict(extra or {}))
         deadline = time.perf_counter() + min(self.invoke_timeout_s, 30.0)
         while True:
             with self._lock:
+                # Checked under the same lock that registers the pending: a
+                # submit racing close() used to insert into _pending *after*
+                # close had failed-and-cleared it, leaving an invocation
+                # whose result() blocked the full invoke_timeout_s.
+                if self._closed:
+                    raise TransportError("transport is closed")
                 worker = self._pick(fn)
                 if worker is not None:
                     predicted_warm = worker.assigned > 0 or worker.done > 0
@@ -367,7 +393,15 @@ class ProcessTransport(Transport):
         rid, ok, data, winfo = msg
         with self._lock:
             pending = self._pending.pop(rid, None)
-            worker.done += 1
+            if pending is not None:
+                worker.done += 1
+            else:
+                # Late response for a request result() already timed out and
+                # dropped: its assignment was rebalanced at drop time, so
+                # booking ``done`` here would drive inflight negative and
+                # make the worker look under-loaded. Other unknown rids
+                # (close() cleared the table) are ignored the same way.
+                self._timed_out.pop(rid, None)
         if pending is None or pending.resolved:
             return
         if ok:
@@ -401,6 +435,9 @@ class ProcessTransport(Transport):
                 pool.remove(worker)
             affected = [p for p in self._pending.values()
                         if p.worker is worker and not p.resolved]
+            # Timed-out requests in flight on this worker can never arrive.
+            for rid in [r for r, w in self._timed_out.items() if w is worker]:
+                del self._timed_out[rid]
             if worker.done > 0:
                 self._dead_births[worker.fn] = 0
             births = self._dead_births.get(worker.fn, 0) + 1
@@ -491,6 +528,7 @@ class ProcessTransport(Transport):
                 if not p.resolved:
                     p.fail(TransportError("transport closed"))
             self._pending.clear()
+            self._timed_out.clear()
         for w in workers:
             try:
                 with w.send_lock:

@@ -10,7 +10,12 @@ both transports:
   :func:`worker_main` in long-lived ``multiprocessing`` processes — one
   process per QueryProcessor partition (the ``squash-processor-<pid>``
   function) and a small pool for the shared allocator function — and every
-  request/response crosses the process boundary codec-encoded.
+  request/response crosses the process boundary codec-encoded;
+* :class:`~repro.serverless.socket_transport.SocketTransport` serves the
+  same loop over TCP connections to ``repro.serverless.host`` processes
+  (possibly on other machines). Both long-lived substrates share
+  :class:`RequestServer`, so container economics (warm starts, fetch
+  timing, derived-state retention) are reported identically.
 
 Worker state mirrors the paper's DRE story with *real* retention: a worker
 is a container. Its first request pays ``fetch_s`` (materializing the
@@ -43,7 +48,7 @@ __all__ = [
     "qa_compute", "qp_compute",
     "pack_plan_response", "unpack_plan_response",
     "pack_qp_response", "unpack_qp_response",
-    "worker_main", "SHUTDOWN",
+    "configure_jax", "RequestServer", "worker_main", "SHUTDOWN",
 ]
 
 SHUTDOWN = None  # sentinel message asking a worker to exit its loop
@@ -222,37 +227,48 @@ def _build_state(init: WorkerInit):
                              qdtype)
 
 
-def worker_main(init: WorkerInit, req_conn, resp_conn) -> None:
-    """Long-lived worker loop: recv (req_id, payload, extra) → send response.
-
-    Response tuples are ``(req_id, ok, payload_or_traceback, info)`` where
-    ``info`` reports the real container economics: ``os_pid``,
-    ``served_before`` (warm-start evidence), ``fetch_s`` (singleton build on
-    a cold hit, 0 afterwards — true DRE), ``compute_s`` (handler busy
-    seconds, including any injected busy-sleep used by the concurrency
-    benches).
-    """
+def configure_jax(init: WorkerInit) -> None:
+    """Replicate the parent's jax configuration inside a worker process."""
     os.environ.setdefault("JAX_PLATFORMS", init.platform)
     import jax
 
     jax.config.update("jax_enable_x64", init.x64)
 
-    state = None
-    served = 0
-    while True:
-        try:
-            msg = req_conn.recv()
-        except (EOFError, OSError):
-            break
-        if msg is SHUTDOWN:
-            break
-        req_id, payload, extra = msg
+
+class RequestServer:
+    """One live container's request loop body, transport-neutral.
+
+    Shared by the pipe-served :func:`worker_main` (ProcessTransport) and the
+    TCP-served ``repro.serverless.host`` connections (SocketTransport), so
+    both long-lived substrates report identical container economics.
+    :meth:`handle` returns ``(ok, data, info)`` — ``data`` is the encoded
+    response on success or a formatted traceback string — where ``info``
+    carries ``os_pid``, ``served_before`` (warm-start evidence), ``fetch_s``
+    (singleton build on a cold hit, 0 afterwards — true DRE), ``state_hit``
+    and ``compute_s`` (handler busy seconds, including any injected
+    busy-sleep used by the concurrency benches).
+
+    ``served`` counts *attempts*, not successes: a container whose first
+    request raised still kept its process (and, if the failure came after
+    the singleton build, its retained state), so the retry must report warm
+    evidence — counting only successes made the parent book a cold start
+    (``warm=False`` with ``state_hit=True``) for a container that
+    demonstrably retained its singleton.
+    """
+
+    def __init__(self, init: WorkerInit):
+        self.init = init
+        self.state = None
+        self.served = 0
+
+    def handle(self, payload: bytes, extra: Optional[Dict]):
         extra = extra or {}
-        info = {"os_pid": os.getpid(), "served_before": served}
+        info = {"os_pid": os.getpid(), "served_before": self.served}
+        self.served += 1
         try:
             t0 = time.perf_counter()
-            if state is None:
-                state = _build_state(init)
+            if self.state is None:
+                self.state = _build_state(self.init)
                 info["fetch_s"] = time.perf_counter() - t0
                 info["state_hit"] = False
             else:
@@ -263,18 +279,38 @@ def worker_main(init: WorkerInit, req_conn, resp_conn) -> None:
             sleep_s = float(extra.get("sleep_s") or 0.0)
             if sleep_s > 0.0:
                 time.sleep(sleep_s)      # emulated busy time (benches/tests)
-            if init.role == "qa":
+            if self.init.role == "qa":
                 wire = pack_plan_response(qa_compute(
-                    state, creq, int(extra["olo"]), int(extra["ohi"])))
+                    self.state, creq, int(extra["olo"]), int(extra["ohi"])))
             else:
-                wire = pack_qp_response(*qp_compute(state, creq))
+                wire = pack_qp_response(*qp_compute(self.state, creq))
             info["compute_s"] = time.perf_counter() - t1
-            served += 1
-            resp_conn.send((req_id, True, pl.encode_message(wire), info))
+            return True, pl.encode_message(wire), info
         except Exception:                            # noqa: BLE001
             info.setdefault("fetch_s", 0.0)
+            info.setdefault("state_hit", self.state is not None)
             info["compute_s"] = 0.0
-            try:
-                resp_conn.send((req_id, False, traceback.format_exc(), info))
-            except (BrokenPipeError, OSError):
-                break
+            return False, traceback.format_exc(), info
+
+
+def worker_main(init: WorkerInit, req_conn, resp_conn) -> None:
+    """Long-lived worker loop: recv (req_id, payload, extra) → send response.
+
+    Response tuples are ``(req_id, ok, payload_or_traceback, info)`` with
+    the :class:`RequestServer` semantics above.
+    """
+    configure_jax(init)
+    server = RequestServer(init)
+    while True:
+        try:
+            msg = req_conn.recv()
+        except (EOFError, OSError):
+            break
+        if msg is SHUTDOWN:
+            break
+        req_id, payload, extra = msg
+        ok, data, info = server.handle(payload, extra)
+        try:
+            resp_conn.send((req_id, ok, data, info))
+        except (BrokenPipeError, OSError):
+            break

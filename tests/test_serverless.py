@@ -160,6 +160,34 @@ def test_result_cache_byte_budget_accounting():
     assert len(cache) == 0 and cache.current_bytes == 0
 
 
+def test_result_cache_oversize_put_preserves_existing_entry():
+    """Regression: putting an over-budget value under a live key used to
+    evict the old entry first and then cache nothing — the cache silently
+    lost an entry it could have kept serving."""
+    cache = dre.ResultCache(max_bytes=4096)
+    cache.put("q", np.zeros(16))
+    cache.put("q", np.zeros(4096))         # over the whole budget: rejected
+    got = cache.get("q")
+    assert got is not None and got.shape == (16,), (
+        "over-budget put must leave the existing entry intact")
+    assert cache.oversize_skips == 1
+    assert cache.evictions == 0
+    assert cache.current_bytes <= 4096
+
+
+def test_container_pool_double_release_is_idempotent():
+    """Regression: releasing one lease twice put its container id into the
+    free list twice, so two concurrent acquires shared one container."""
+    pool = dre.ContainerPool(warm_prob=1.0, seed=0)
+    lease = pool.acquire("ds/p0", 1000)
+    pool.release(lease)
+    pool.release(lease)                    # double release: no-op
+    a = pool.acquire("ds/p0", 1000)
+    b = pool.acquire("ds/p0", 1000)        # concurrent wave
+    assert a.container_id != b.container_id, (
+        "double-released container handed to two in-flight leases")
+
+
 def test_container_pool_dre_off_does_not_seed_retention():
     """Regression (off→on sequence): a DRE-off invocation used to install
     the singleton anyway, so a later DRE-on call scored a hit it never paid
@@ -211,6 +239,11 @@ def test_container_pool_stale_lease_cannot_resurrect_derived_state():
 
 
 # ----------------------------------------------------------------- cost model
+
+def test_cost_model_exports_daily_cost_curve():
+    """``daily_cost_curve`` is public API (Fig. 8 consumers import it)."""
+    assert "daily_cost_curve" in cost_model.__all__
+
 
 def test_cost_model_components():
     fleet = cost_model.LambdaFleet(

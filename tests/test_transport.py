@@ -1,15 +1,19 @@
-"""Transport subsystem tests: LocalTransport/ProcessTransport parity, real
-concurrency, worker crash retry, and payload chunking over real process
-boundaries (PR 5 acceptance).
+"""Transport subsystem tests: Local/Process/Socket parity, real concurrency,
+worker crash + connection-loss retry, and payload budgets over real process
+and TCP boundaries (PR 5/6 acceptance).
 
-Auto-marked ``transport`` (conftest): ProcessTransport tests spawn real
-worker processes (one per partition + an allocator pool), so CI runs them
-under a hard timeout and they can be deselected with ``-m "not transport"``.
+Auto-marked ``transport`` (conftest): these tests spawn real worker
+processes and TCP host processes, so CI runs them under a hard timeout and
+they can be deselected with ``-m "not transport"``.
 """
 
 import os
 import signal
+import socket
+import subprocess
+import sys
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -21,6 +25,7 @@ from repro.serverless import (PayloadOverflowError, RuntimeConfig,
 from repro.serverless import nodes as nd
 from repro.serverless import payload as pl
 from repro.serverless import transport as tp
+from repro.serverless import workers as wk
 
 
 @pytest.fixture(scope="module")
@@ -43,6 +48,39 @@ def process_rt(built):
         branching=2, max_level=1, transport="process", qa_workers=2))
     yield rt
     rt.close()
+
+
+@pytest.fixture(scope="module")
+def socket_rt(built):
+    """One long-lived SocketTransport runtime (auto-spawned loopback hosts);
+    TCP workers persist across searches like the process pool does."""
+    _, _, index, _ = built
+    rt = ServerlessRuntime(index, RuntimeConfig(
+        branching=2, max_level=1, transport="socket", qa_workers=2))
+    yield rt
+    rt.close()
+
+
+def _qa_process_transport(index, **kw):
+    """A bare one-worker allocator pool for transport-internals tests."""
+    import jax
+
+    init = wk.WorkerInit(
+        role="qa", fn="qa", pid=None,
+        x64=bool(jax.config.jax_enable_x64),
+        platform=os.environ.get("JAX_PLATFORMS", "cpu") or "cpu",
+        bundle=wk.build_qa_bundle(index))
+    return tp.ProcessTransport({"qa": (init, 1)}, **kw)
+
+
+def _qa_request(ds, preds):
+    """A minimal valid allocator request (one query, own slice [0, 1))."""
+    return {
+        "qidx": np.asarray([0], dtype=np.int32),
+        "queries": ds.queries[:1],
+        "preds": pl.predicates_to_json(preds),
+        "k": 5,
+    }
 
 
 # ------------------------------------------------------------------- parity
@@ -301,3 +339,237 @@ def test_local_transport_inline_contract():
     # payload form decodes through the codec
     inv2 = t.submit("fn", payload=pl.encode_message({"x": 3}))
     assert inv2.result()[0] == {"echo": 6}
+
+
+# --------------------------------------------- process-transport bookkeeping
+
+def test_timeout_rebalances_worker_counters(built):
+    """Satellite regression: a timed-out invocation used to bump
+    ``assigned`` forever (the hung worker was shunned by least-loaded
+    routing even after recovering), and its late response was double-booked
+    into ``done``, driving ``inflight`` negative."""
+    ds, preds, index, _ = built
+    t = _qa_process_transport(index)
+    req = _qa_request(ds, preds)
+    extra = {"olo": 0, "ohi": 1}
+    try:
+        t.invoke("qa", request=req, extra=extra)        # warm the worker
+        worker = t._workers["qa"][0]
+        t.invoke_timeout_s = 0.4
+        inv = t.submit("qa", request=req,
+                       extra={**extra, "sleep_s": 1.2})
+        with pytest.raises(tp.TransportError, match="timed out"):
+            inv.result()
+        assert worker.inflight == 0, "timeout must hand back the assignment"
+        assert t._timed_out, "in-flight rid parked for the late response"
+        # The worker is still sleeping; its late response must be dropped
+        # without re-booking ``done``.
+        deadline = time.perf_counter() + 10.0
+        while t._timed_out and time.perf_counter() < deadline:
+            time.sleep(0.05)
+        assert not t._timed_out, "late response must clear the parked rid"
+        assert worker.inflight == 0, "late response must not re-book done"
+        t.invoke_timeout_s = 180.0
+        resp, info = t.invoke("qa", request=req, extra=extra)   # still usable
+        assert wk.unpack_plan_response(resp)["plans"]
+        assert info.warm and worker.inflight == 0
+    finally:
+        t.close()
+
+
+def test_timeout_with_worker_that_never_responds(built):
+    """The never-responds flavour: counters rebalance at the drop even when
+    no late response ever arrives, and close() doesn't hang on the worker."""
+    ds, preds, index, _ = built
+    t = _qa_process_transport(index, invoke_timeout_s=0.4)
+    req = _qa_request(ds, preds)
+    try:
+        inv = t.submit("qa", request=req,
+                       extra={"olo": 0, "ohi": 1, "sleep_s": 30.0})
+        with pytest.raises(tp.TransportError, match="timed out"):
+            inv.result()
+        worker = t._workers["qa"][0]
+        assert worker.inflight == 0 and worker.assigned == worker.done
+        assert len(t._timed_out) == 1
+    finally:
+        t0 = time.perf_counter()
+        t.close()
+        assert time.perf_counter() - t0 < 10.0
+    assert not t._timed_out, "close() clears parked rids"
+
+
+def test_submit_racing_close_fails_fast(built):
+    """Satellite regression: ``_closed`` was checked before the lock that
+    registers the pending, so a submit racing close() could enqueue an
+    invocation whose result() then blocked the full invoke timeout."""
+    ds, preds, index, _ = built
+    t = _qa_process_transport(index)
+    req = _qa_request(ds, preds)
+    t.close()
+    t0 = time.perf_counter()
+    with pytest.raises(tp.TransportError, match="closed"):
+        t.submit("qa", request=req, extra={"olo": 0, "ohi": 1})
+    assert time.perf_counter() - t0 < 1.0, "must fail fast, not time out"
+
+
+def test_warm_accounting_survives_failed_first_request(built):
+    """Satellite regression: ``served`` counted successes, so a container
+    whose first request raised reported ``warm=False`` with
+    ``state_hit=True`` on the retry — a cold start for a process that
+    demonstrably retained its singleton."""
+    ds, preds, index, _ = built
+    t = _qa_process_transport(index)
+    try:
+        inv = t.submit("qa", request={"bogus": 1},
+                       extra={"olo": 0, "ohi": 1})
+        with pytest.raises(tp.TransportError, match="handler raised"):
+            inv.result()
+        resp, info = t.invoke("qa", request=_qa_request(ds, preds),
+                              extra={"olo": 0, "ohi": 1})
+        assert info.state_hit, "singleton built before the failure is kept"
+        assert info.warm, "an attempt is warm evidence, success or not"
+    finally:
+        t.close()
+
+
+# ----------------------------------------------------------- socket transport
+
+def test_socket_transport_bitwise_parity(built, process_rt, socket_rt):
+    """Acceptance: 4-way bitwise parity — jax reference, LocalTransport,
+    ProcessTransport and SocketTransport all return identical ids/dists and
+    aggregate SearchStats, with the socket fleet served over real TCP."""
+    ds, preds, index, (ids_j, d_j, s_j) = built
+    local = ServerlessRuntime(index, RuntimeConfig(branching=2, max_level=1))
+    r_l = local.search(ds.queries, preds, k=10)
+    r_p = process_rt.search(ds.queries, preds, k=10)
+    r_s = socket_rt.search(ds.queries, preds, k=10)
+    fin = np.isfinite(d_j)
+    for r in (r_l, r_p, r_s):
+        np.testing.assert_array_equal(r.ids, ids_j)
+        np.testing.assert_array_equal(np.isfinite(r.dists), fin)
+        np.testing.assert_array_equal(r.dists[fin], d_j[fin])
+        assert r.stats == s_j
+    assert r_s.trace.transport == "socket"
+    assert r_s.trace.measured_makespan_s > 0
+    served = [n for n in r_s.trace.nodes if n.kind in ("qa", "qp")]
+    assert served and all(n.worker_host for n in served), (
+        "every socket-served node records its host:port")
+    assert r_s.trace.worker_hosts, "RunTrace aggregates the serving hosts"
+    assert os.getpid() not in {n.worker_pid for n in served}, (
+        "socket workers live in host processes, not the client")
+
+
+def test_socket_real_warm_reuse(built, socket_rt):
+    """Second batch over live TCP workers: zero rebuilds, every invocation a
+    real warm start on the same hosts (retention lives in the connection)."""
+    ds, preds, _, (ids_j, _, _) = built
+    r1 = socket_rt.search(ds.queries, preds, k=10)
+    hosts1 = {n.node: n.worker_host for n in r1.trace.nodes
+              if n.kind == "qp"}
+    r2 = socket_rt.search(ds.queries, preds, k=10)
+    np.testing.assert_array_equal(r2.ids, ids_j)
+    assert r2.trace.dre.s3_gets == 0
+    qp = [n for n in r2.trace.nodes if n.kind == "qp"]
+    assert all(n.warm and n.dre_hit and n.fetch_s == 0.0 for n in qp)
+    assert {n.node: n.worker_host for n in qp} == hosts1, (
+        "partition shards stay pinned to their hosts")
+
+
+def test_socket_mid_flight_disconnect_reconnects(built):
+    """Acceptance: sever a QP link while its invocation is in flight — the
+    transport reconnects with backoff, re-sends under the retry budget, and
+    the search result stays bitwise-identical with the retry in the trace."""
+    ds, preds, index, (ids_j, _, s_j) = built
+    rt = ServerlessRuntime(index, RuntimeConfig(
+        branching=2, max_level=1, transport="socket", qa_workers=1,
+        worker_sleep_s=0.6))
+    try:
+        rt.search(ds.queries, preds, k=10)              # warm the fleet
+        dropper = threading.Timer(
+            0.25, lambda: rt.transport.drop_connection("qp:0"))
+        dropper.start()
+        r = rt.search(ds.queries, preds, k=10)
+        dropper.join()
+    finally:
+        rt.close()
+    np.testing.assert_array_equal(r.ids, ids_j)
+    assert r.stats == s_j
+    assert r.trace.worker_retries >= 1
+    qp0 = [n for n in r.trace.nodes if n.node == "qp:0"]
+    assert any(not n.warm for n in qp0), (
+        "a reconnected link is a fresh container: the re-served request "
+        "must report a cold start")
+
+
+def test_socket_busy_worker_not_declared_dead(built):
+    """Heartbeat discrimination: compute far longer than the staleness
+    window must NOT trip the hang guard — the host's receiver thread keeps
+    answering PING while the compute thread is busy."""
+    ds, preds, index, (ids_j, _, _) = built
+    rt = ServerlessRuntime(index, RuntimeConfig(
+        branching=2, max_level=1, transport="socket", qa_workers=1,
+        worker_sleep_s=1.5, heartbeat_s=0.15))   # window ≈ 1.2 s < sleep
+    try:
+        r = rt.search(ds.queries, preds, k=10)
+    finally:
+        rt.close()
+    np.testing.assert_array_equal(r.ids, ids_j)
+    assert r.trace.worker_retries == 0, (
+        "busy-but-alive links must not be torn down and retried")
+
+
+def test_socket_remote_host_serves_qp_shards(built):
+    """A genuinely separate server process (spawned via the CLI entrypoint,
+    port scraped from its LISTENING line) serves the whole fleet: parity
+    holds and every QA/QP invocation reports the server's pid and address."""
+    ds, preds, index, (ids_j, _, s_j) = built
+    repo_src = os.path.join(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = repo_src + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.serverless.host",
+         "--listen", "127.0.0.1:0"],
+        stdout=subprocess.PIPE, text=True, env=env)
+    try:
+        line = proc.stdout.readline().strip()
+        assert line.startswith("LISTENING "), f"unexpected banner: {line!r}"
+        addr = f"127.0.0.1:{int(line.split()[1])}"
+        rt = ServerlessRuntime(index, RuntimeConfig(
+            branching=2, max_level=1, transport="socket", qa_workers=1,
+            hosts=(addr,)))
+        try:
+            r = rt.search(ds.queries, preds, k=10)
+        finally:
+            rt.close()
+        np.testing.assert_array_equal(r.ids, ids_j)
+        assert r.stats == s_j
+        served = [n for n in r.trace.nodes if n.kind in ("qa", "qp")]
+        assert {n.worker_pid for n in served} == {proc.pid}
+        assert {n.worker_host for n in served} == {addr}
+        assert r.trace.worker_hosts == [addr]
+    finally:
+        proc.terminate()
+        proc.wait(timeout=10)
+
+
+def test_socket_frame_budget_enforced(built, socket_rt):
+    """The per-frame byte budget is enforced at the socket layer itself, and
+    an oversized invocation payload is rejected at submit before any byte
+    hits the wire."""
+    a, b = socket.socketpair()
+    try:
+        pl.write_frame(a, pl.FRAME_REQ, b"x" * 100, max_bytes=1000)
+        kind, body = pl.read_frame(b)
+        assert kind == pl.FRAME_REQ and body == b"x" * 100
+        with pytest.raises(PayloadOverflowError):
+            pl.write_frame(a, pl.FRAME_REQ, b"y" * 2000, max_bytes=1000)
+    finally:
+        a.close()
+        b.close()
+    transport = socket_rt.transport
+    with pytest.raises(PayloadOverflowError):
+        transport.submit(
+            "qa", payload=b"z" * (transport.max_payload_bytes + 1),
+            extra={"olo": 0, "ohi": 1})
