@@ -94,7 +94,7 @@ def run(quick: bool = True) -> dict:
         by["uniform-bits(b=1d)"]["recall"] + 0.05
     # refinement buys the final recall points
     assert by["no-refine(b=1d)"]["recall"] <= by["full(b=1d)"]["recall"]
-    save_json("bench_ablations", {"rows": rows})
+    save_json("BENCH_ablations", {"rows": rows})
     return {"rows": rows}
 
 

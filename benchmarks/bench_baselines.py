@@ -101,7 +101,7 @@ def run(quick: bool = True) -> dict:
         "single-pass filtered SQUASH must beat narrow post-filtered HNSW"
     assert sq_mem < hnsw.graph_bytes() / 3, \
         "OSQ index must be ≥3x smaller than graph+full-precision HNSW"
-    save_json("bench_baselines", {"rows": rows})
+    save_json("BENCH_baselines", {"rows": rows})
     return {"rows": rows}
 
 

@@ -183,7 +183,7 @@ def run(quick: bool = True) -> dict:
             assert r["payload_on"] < r["payload_off"]
             assert r["cost_reduction"] > 1.0
     table3 = _table3_cache_ratio(quick)
-    save_json("bench_cache", {"rows": rows, "table3": table3})
+    save_json("BENCH_cache", {"rows": rows, "table3": table3})
     return {"rows": rows, "table3": table3}
 
 

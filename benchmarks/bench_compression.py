@@ -37,7 +37,7 @@ def run(quick: bool = True) -> dict:
         print(f"  {preset:8s} d={d:4d} b={b:5d}  SQ={w['segments_sq']}seg/vec "
               f" OSQ={w['segments_osq']}seg/vec  waste {w['waste_sq']}b→"
               f"{w['waste_osq']}b  saving={w['saving_ratio']:.2f}x")
-    save_json("bench_compression", {"rows": rows})
+    save_json("BENCH_compression", {"rows": rows})
     return {"rows": rows}
 
 

@@ -18,7 +18,7 @@ the TCP SocketTransport fleet (measured wall-clock) — persisted under
 
 from __future__ import annotations
 
-from benchmarks.common import header, save_json
+from benchmarks.common import header, safe_ratio, save_json
 from repro.core.cost_model import (PricingConstants, daily_cost_curve,
                                    server_baseline_cost)
 
@@ -82,6 +82,11 @@ def _modeled_vs_measured_latency() -> dict:
         "modeled_process_s": t_proc.makespan_s,
         "measured_process_s": t_proc.measured_makespan_s,
         "measured_socket_s": t_sock.measured_makespan_s,
+        # None (not a division blow-up / inf) when a measured makespan is 0.
+        "modeled_over_measured_process": safe_ratio(
+            t_proc.makespan_s, t_proc.measured_makespan_s),
+        "modeled_over_measured_socket": safe_ratio(
+            t_sock.makespan_s, t_sock.measured_makespan_s),
         "socket_hosts": t_sock.worker_hosts,
         "cost_modeled_local": t_local.cost["total"],
         "cost_modeled_process": t_proc.cost["total"],
@@ -135,6 +140,11 @@ def run(quick: bool = True) -> dict:
           f"{lat['measured_process_s']:.3f}s / MEASURED socket "
           f"{lat['measured_socket_s']:.3f}s "
           f"({len(lat['socket_hosts'])} hosts)")
+    ratio = lat["modeled_over_measured_process"]
+    if ratio is not None:
+        print(f"  modeled/measured ratio: process {ratio:.2f}x"
+              + (f" / socket {lat['modeled_over_measured_socket']:.2f}x"
+                 if lat["modeled_over_measured_socket"] is not None else ""))
     tune = _autotune_adc_savings()
     print(f"  autotuned keep budgets: ADC evals {tune['adc_static']} → "
           f"{tune['adc_tuned']} ({tune['adc_savings']:.0%} fewer), "
@@ -166,7 +176,7 @@ def run(quick: bool = True) -> dict:
     print(f"  crossover vs 2×c7i.4xlarge at ≈{crossover:,} q/day "
           f"(paper: ~1M–3.5M)")
     assert 100_000 <= crossover <= 50_000_000
-    save_json("bench_cost", {"rows": rows, "per_batch_cost": per_batch,
+    save_json("BENCH_cost", {"rows": rows, "per_batch_cost": per_batch,
                              "crossover": crossover,
                              "autotune": tune,
                              "modeled_vs_measured": lat,

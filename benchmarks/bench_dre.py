@@ -64,7 +64,7 @@ def run(quick: bool = True) -> dict:
     assert out["cost_reduction"] > 1.0
     assert out["latency_reduction"] > 1.02, \
         "fetch elimination must show up in the wave makespan"
-    save_json("bench_dre", out)
+    save_json("BENCH_dre", out)
     return out
 
 

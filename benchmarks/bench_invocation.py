@@ -22,7 +22,8 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import build_tiny_squash_index, header, save_json
+from benchmarks.common import (build_tiny_squash_index, header, safe_ratio,
+                               save_json)
 
 CONFIGS = [(10, 1), (4, 2), (4, 3), (5, 3), (6, 3), (4, 4)]
 
@@ -93,6 +94,10 @@ def _transport_sweep(ds, preds, idx) -> list:
                 "measured_cold_s": cold_s,
                 "measured_warm_s": warm.trace.measured_makespan_s,
                 "modeled_warm_s": warm.trace.makespan_s,
+                # None when the measured makespan is 0 (guarded ratio).
+                "modeled_over_measured": safe_ratio(
+                    warm.trace.makespan_s,
+                    warm.trace.measured_makespan_s),
                 "worker_hosts": warm.trace.worker_hosts,
             })
             print(f"  {transport}/{mode:<10s} measured warm="
@@ -105,8 +110,10 @@ def _transport_sweep(ds, preds, idx) -> list:
         assert tree_s < seq_s, (
             f"{transport}: concurrent QP wave ({tree_s:.3f}s) must beat the "
             f"sequential strawman ({seq_s:.3f}s) in *measured* wall-clock")
-        print(f"  {transport}: measured tree speedup over sequential: "
-              f"{seq_s / tree_s:.1f}x")
+        speedup = safe_ratio(seq_s, tree_s)
+        if speedup is not None:
+            print(f"  {transport}: measured tree speedup over sequential: "
+                  f"{speedup:.1f}x")
     return rows
 
 

@@ -83,7 +83,7 @@ def run(quick: bool = True) -> dict:
     for r in rows:
         print(f"  {r['kernel']:16s} pallas(interp)={r['t_pallas_interp']*1e3:8.2f}ms"
               f"  jnp-ref={r['t_ref']*1e3:8.2f}ms  (correctness: OK)")
-    save_json("bench_kernels", {"rows": rows})
+    save_json("BENCH_kernels", {"rows": rows})
     return {"rows": rows}
 
 

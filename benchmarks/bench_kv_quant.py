@@ -1,6 +1,6 @@
 """OSQ-KV sweep — serving quality vs cache compression (beyond-paper).
 
-The paper's segment-packed SQ applied to the KV cache (DESIGN.md §4.ii),
+The paper's segment-packed SQ applied to the KV cache (DESIGN.md §5.ii),
 swept over bit widths on a real (reduced) model: for each of 16/8/4 bits
 and the non-uniform 8/4 split, measure cache compression, decode logit
 error vs the fp32 cache, and greedy-token agreement over a batch of
@@ -82,7 +82,7 @@ def run(quick: bool = True) -> dict:
     # compressing more than 8-bit
     assert by["nonuniform-8/4"]["logit_rmse"] < by["4b"]["logit_rmse"]
     assert by["nonuniform-8/4"]["compression"] > by["8b"]["compression"]
-    save_json("bench_kv_quant", {"rows": rows})
+    save_json("BENCH_kv_quant", {"rows": rows})
     return {"rows": rows}
 
 

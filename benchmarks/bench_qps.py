@@ -133,7 +133,7 @@ def run(quick: bool = True) -> dict:
         print(f"  {preset:8s} best FaaS QPS={best['qps']:.0f} (N_QA="
               f"{best['n_qa']}), server-8core QPS={server_qps:.0f} → "
               f"{best['qps'] / server_qps:.1f}x")
-    save_json("bench_qps", {"rows": out, "backend_shootout": backends})
+    save_json("BENCH_qps", {"rows": out, "backend_shootout": backends})
     return {"rows": out, "backend_shootout": backends}
 
 

@@ -81,7 +81,7 @@ def run(quick: bool = True) -> dict:
                       f"{1 - stats_t.adc_evals / max(stats.adc_evals, 1):.0%}"
                       f" fewer)")
                 idx.set_profile(None)
-    save_json("bench_recall", {"rows": rows})
+    save_json("BENCH_recall", {"rows": rows})
     paper_rows = [r for r in rows if r["config"].startswith("paper")]
     assert all(r["recall"] >= 0.95 for r in paper_rows), \
         "paper configuration must reach ≥0.95 recall on the stand-ins"

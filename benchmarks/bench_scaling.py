@@ -48,7 +48,7 @@ def run(quick: bool = True) -> dict:
         score = lambda r: r["makespan_s"] * r["cost_per_1k_queries"]
         assert min(score(by[84]), score(by[155])) < score(by[340]), \
             "84–155 should beat 340 on cost×latency (paper §5.5)"
-    save_json("bench_scaling", {"rows": rows})
+    save_json("BENCH_scaling", {"rows": rows})
     return {"rows": rows}
 
 

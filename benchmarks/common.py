@@ -31,6 +31,19 @@ def save_json(name: str, payload: Dict[str, Any]) -> str:
     return path
 
 
+def safe_ratio(num: float, den: float):
+    """num / den, or None when the denominator is not positive.
+
+    Measured wall-clock denominators can legitimately be 0.0 (sub-resolution
+    timer on a trivial run, or a field defaulted before measurement); a
+    modeled-vs-measured ratio over one is noise, not data, so callers
+    persist None and skip the derived prints instead of dividing.
+    """
+    if den is None or den <= 0:
+        return None
+    return num / den
+
+
 def recall_at_k(found_ids: np.ndarray, gt_ids: np.ndarray) -> float:
     """Paper §5.1: recall@k = |G ∩ R| / k, averaged over queries."""
     q, k = gt_ids.shape

@@ -3,7 +3,7 @@
   PYTHONPATH=src python -m benchmarks.run [--full] [--skip-roofline]
   PYTHONPATH=src python -m benchmarks.run --smoke   # tiny post-test gate
 
-Paper-artifact map (DESIGN.md §6):
+Paper-artifact map (DESIGN.md §7):
   Fig. 2  → bench_compression     Fig. 6  → bench_dre
   Fig. 8  → bench_cost            Fig. 9  → bench_qps
   Fig. 10 → bench_scaling         §5.3    → bench_recall (+ autotune)
@@ -158,6 +158,59 @@ def smoke() -> int:
     assert t2.payload_bytes < tr.payload_bytes
     assert t2.cost["total"] < tr.cost["total"]
 
+    # Observability gate (repro.obs): the same choreography with tracing ON
+    # must stay bitwise-identical to the jax plane across all three
+    # transports, while persisting one JSONL trace record per transport —
+    # CO/QA/QP spans stitched parent→child, worker-side sub-spans from both
+    # real substrates — and a metrics registry that yields latency
+    # quantiles. The trace file is uploaded as a CI artifact.
+    from repro.obs.metrics import REGISTRY as obs_registry
+    from repro.obs.export import read_jsonl
+
+    trace_path = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "results", "SMOKE_trace.jsonl")
+    if os.path.exists(trace_path):
+        os.remove(trace_path)
+    obs_registry.reset()
+    try:
+        for transport in ("local", "process", "socket"):
+            rt_o = ServerlessRuntime(idx, RuntimeConfig(
+                branching=2, max_level=1, transport=transport, qa_workers=1,
+                invoke_timeout_s=120.0, obs_enabled=True,
+                obs_trace_path=trace_path))
+            try:
+                res_o = rt_o.search(ds.queries, preds, k=10)
+                assert np.array_equal(res_o.ids, ids_j), (
+                    f"{transport}: obs-enabled ids diverged")
+                assert res_o.stats == stats_j, (
+                    f"{transport}: obs-enabled stats drift")
+            finally:
+                rt_o.close()
+        records = read_jsonl(trace_path)
+        assert len(records) == 3, f"expected 3 trace records, got {len(records)}"
+        by_transport = {r["meta"]["transport"]: r for r in records}
+        for transport in ("process", "socket"):
+            spans = by_transport[transport]["spans"]
+            kinds = {s["attrs"].get("kind") for s in spans
+                     if s["attrs"].get("kind")}
+            assert kinds == {"co", "qa", "qp"}, (
+                f"{transport}: missing node kinds in trace: {kinds}")
+            wnames = {s["name"] for s in spans
+                      if s["name"].startswith("worker.")}
+            assert {"worker.compute", "worker.serialize"} <= wnames, (
+                f"{transport}: worker-side sub-spans missing: {wnames}")
+            ids_in_run = {s["id"] for s in spans}
+            assert all(s["parent"] is None or s["parent"] in ids_in_run
+                       for s in spans), f"{transport}: dangling span parent"
+        snap = obs_registry.snapshot()
+        h = snap["histograms"]["transport.process.invoke_s"]
+        assert h["p50"] is not None and h["p99"] is not None
+        obs_p50, obs_p99 = h["p50"], h["p99"]
+    finally:
+        obs_registry.disable()
+        obs_registry.reset()
+
     # Recall-targeted autotune gate: the calibrated per-partition profile
     # must hold recall at-or-above the static configuration's while
     # evaluating strictly fewer ADC candidates, with all three backends
@@ -189,7 +242,9 @@ def smoke() -> int:
           f"{tr.invocations('qp')} QP, ${tr.cost['total']:.6f}/batch; "
           f"cached repeat: {len(t2.nodes)} invocation(s), "
           f"${t2.cost['total']:.6f}/batch; autotuned: recall@10="
-          f"{tuned_recall:.3f} at {st_tn.adc_evals}/{static_adc} ADC evals")
+          f"{tuned_recall:.3f} at {st_tn.adc_evals}/{static_adc} ADC evals; "
+          f"obs: 3-transport trace at {os.path.relpath(trace_path)}, "
+          f"process invoke p50={obs_p50 * 1e3:.1f}ms p99={obs_p99 * 1e3:.1f}ms")
     return 0
 
 

@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python examples/rag_serving.py
 
-The integration showcase (DESIGN.md §4.i–ii): a small decoder LM (reduced
+The integration showcase (DESIGN.md §5.i–ii): a small decoder LM (reduced
 qwen2-vl text path) produces document embeddings from its final hidden
 state; SQUASH indexes them with attributes; queries retrieve filtered
 neighbors; the LM then "generates" continuations with batched requests

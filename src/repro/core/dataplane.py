@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
+from repro.obs.metrics import REGISTRY as _METRICS
 
 __all__ = [
     "StackedIndex", "stack_index", "part_stack_arrays", "stack_single_part",
@@ -475,8 +476,15 @@ def make_plane(
 
     @jax.jit
     def plane(queries, stacked, cand_mask, keep, take):
+        # Python here runs only at trace time (shapes static), so both the
+        # test counter and the obs compile metric count jit retraces, not
+        # calls. Bucketing by pow2 query-batch size mirrors the trace-cache
+        # key the padding scheme aims for.
         if trace_counter is not None:
             trace_counter[0] += 1
+        q = int(queries.shape[0])
+        bucket = 1 if q <= 1 else 1 << (q - 1).bit_length()
+        _METRICS.counter(f"dataplane.jit_compiles.q{bucket}").inc()
         return batched_stage345(
             queries, stacked, cand_mask, keep, take,
             k=k, keep_s=keep_s, take_s=take_s, refine=refine,

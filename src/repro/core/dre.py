@@ -31,6 +31,8 @@ from typing import Dict, Hashable, Optional, Set, Tuple
 
 import numpy as np
 
+from repro.obs.metrics import REGISTRY as _METRICS
+
 __all__ = ["ContainerPool", "ResultCache", "DreStats", "Lease"]
 
 
@@ -126,6 +128,11 @@ class ContainerPool:
             fetch_seconds=fetch_s,
         )
         self.stats.merge(delta)
+        _METRICS.counter("dre.pool.leases").inc()
+        if warm:
+            _METRICS.counter("dre.pool.warm_starts").inc()
+        if hit:
+            _METRICS.counter("dre.pool.dre_hits").inc()
         return Lease(container_id=cid, warm=warm, dre_hit=hit,
                      fetch_s=fetch_s, stats=delta, epoch=self._epoch)
 
@@ -156,6 +163,7 @@ class ContainerPool:
         hit = use_dre and key in self._derived.get(lease.container_id, ())
         if hit:
             self.stats.derived_hits += 1
+            _METRICS.counter("dre.pool.derived_hits").inc()
         return hit
 
     def retain_derived(self, lease: Lease, key: Hashable) -> None:
@@ -252,8 +260,10 @@ class ResultCache:
         if entry is not _MISSING:
             self._store.move_to_end(key)   # LRU refresh
             self.hits += 1
+            _METRICS.counter("dre.result_cache.hits").inc()
             return entry
         self.misses += 1
+        _METRICS.counter("dre.result_cache.misses").inc()
         return None
 
     def put(self, key: Hashable, value: object) -> None:
@@ -265,6 +275,7 @@ class ResultCache:
             # cached nothing, silently losing a live entry). The drop is
             # visible in ``oversize_skips``.
             self.oversize_skips += 1
+            _METRICS.counter("dre.result_cache.oversize_skips").inc()
             return
         if key in self._store:
             self.current_bytes -= self._sizes.pop(key)
@@ -280,6 +291,7 @@ class ResultCache:
             old_key, _ = self._store.popitem(last=False)
             self.current_bytes -= self._sizes.pop(old_key)
             self.evictions += 1
+            _METRICS.counter("dre.result_cache.evictions").inc()
 
     def invalidate(self) -> None:
         """Drop every entry (index rebuilt / dataset swapped)."""
@@ -287,6 +299,7 @@ class ResultCache:
         self._sizes.clear()
         self.current_bytes = 0
         self.invalidations += 1
+        _METRICS.counter("dre.result_cache.invalidations").inc()
 
     def __len__(self) -> int:
         return len(self._store)

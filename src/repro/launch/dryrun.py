@@ -9,7 +9,7 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out]
 
 For each pair this lowers the right step function (train_step / prefill_step /
-serve_step per DESIGN.md §4), compiles it for the production mesh, and
+serve_step per DESIGN.md §5), compiles it for the production mesh, and
 reports memory_analysis + cost_analysis + a collective-bytes breakdown parsed
 from the compiled HLO — the inputs to EXPERIMENTS.md §Dry-run/§Roofline.
 """
@@ -46,7 +46,7 @@ __all__ = ["input_specs", "arch_for_shape", "lower_pair", "dryrun_pair",
            "collective_bytes", "run_all"]
 
 # Pure full-attention archs get a documented sliding-window serving variant
-# for long_500k (sub-quadratic rule, DESIGN.md §4); SSM/hybrid/local:global
+# for long_500k (sub-quadratic rule, DESIGN.md §5); SSM/hybrid/local:global
 # run natively.
 LONG_WINDOW = 8192
 _NATIVE_LONG = {"mamba2-370m", "zamba2-7b", "gemma3-4b"}
@@ -109,7 +109,7 @@ def lower_pair(name: str, shape_name: str, *, multi_pod: bool = False,
     specs = input_specs(cfg, shape, param_dtype)
 
     if shape.mode == "train":
-        # bf16 moments for the 480B giant (DESIGN.md §4), fp32 otherwise.
+        # bf16 moments for the 480B giant (DESIGN.md §5), fp32 otherwise.
         state_dtype = jnp.bfloat16 if cfg.d_model >= 7168 else jnp.float32
         opt_cfg = AdamWConfig(state_dtype=state_dtype)
         opt = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params)

@@ -1,4 +1,4 @@
-"""Production mesh builders (DESIGN.md §5).
+"""Production mesh builders (DESIGN.md §6).
 
 A FUNCTION, not a module-level constant — importing this module must never
 touch jax device state (the dry-run sets XLA_FLAGS before any jax import).

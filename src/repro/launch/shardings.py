@@ -1,6 +1,6 @@
 """GSPMD sharding profiles for params, optimizer state, batches, KV caches.
 
-Rules are name-based over pytree paths (DESIGN.md §5):
+Rules are name-based over pytree paths (DESIGN.md §6):
 
   * projections whose OUTPUT grows (wq/wk/wv/gate/up/router/in_proj/w_dkv/
     w_uk/w_uv/lm_head/cb_head): d_out over ``model``, d_in over ``data``

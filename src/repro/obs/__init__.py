@@ -1,0 +1,34 @@
+"""Observability layer: distributed spans, metrics, trace export (PR 7).
+
+* ``metrics``  — the process-global :data:`~repro.obs.metrics.REGISTRY` of
+  counters / gauges / fixed-bucket latency histograms (p50/p95/p99),
+  disabled by default and zero-cost when off. Instrumented call sites live
+  in ``serverless.transport`` / ``socket_transport`` (submits, retries,
+  respawns, reconnects, heartbeats, frame bytes, invoke latency),
+  ``core.dre`` (result-cache hits/misses/evictions, pool leases/warm rate)
+  and ``core.dataplane`` (jit trace-cache compiles per pow2 query bucket).
+* ``spans``    — span contexts that cross the transport boundary inside the
+  ``extra`` envelope (never the budgeted payload), worker-side sub-spans
+  echoed back in the response ``info``, and the per-run :class:`Recorder`
+  that stitches them into one tree.
+* ``export``   — JSONL persistence under ``results/`` + an in-memory
+  exporter for tests.
+* ``timeline`` — ``python -m repro.obs.timeline <trace.jsonl>``: a per-node
+  text Gantt of the Alg. 2 tree walk.
+
+The whole layer is opt-in via ``RuntimeConfig(obs_enabled=True,
+obs_trace_path=...)``; ids, ``SearchStats`` and all traces are
+bitwise-identical with it on or off (pinned by tests). This module imports
+only the standard library, so ``core``/``serverless`` can instrument
+freely without cycles.
+"""
+
+from repro.obs.export import InMemoryExporter, JsonlExporter, read_jsonl, run_record
+from repro.obs.metrics import REGISTRY, Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.spans import Recorder, Span, SpanContext, new_run_id
+
+__all__ = [
+    "REGISTRY", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "Recorder", "Span", "SpanContext", "new_run_id",
+    "InMemoryExporter", "JsonlExporter", "read_jsonl", "run_record",
+]

@@ -1,0 +1,273 @@
+"""Process-global metrics registry: counters, gauges, latency histograms.
+
+The registry is **disabled by default and zero-cost when off**: every
+accessor returns one shared no-op metric, so instrumented hot paths (the
+transports, DRE, the dataplane trace hook) pay a dict-free method call and
+nothing else — ids, ``SearchStats`` and all traces are bitwise-identical
+with metrics on or off. Enabling (``REGISTRY.enable()``, or transparently
+via ``RuntimeConfig(obs_enabled=True)``) turns the same call sites into real
+instruments.
+
+Histograms are fixed-bucket: each observation lands in the first bucket
+whose upper bound contains it (plus an implicit +inf overflow bucket), and
+quantiles come out by Prometheus-style linear interpolation inside the
+containing bucket — exact on distributions whose mass fills buckets
+uniformly, which the tests pin. ``snapshot()`` serializes everything
+(including p50/p95/p99 per histogram) into one JSON-able dict.
+
+Metric name convention: dotted, ``<subsystem>.<object>.<event>`` —
+see DESIGN.md §4 for the full table the runtime emits.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "REGISTRY",
+    "DEFAULT_LATENCY_BUCKETS", "DEFAULT_BYTES_BUCKETS",
+]
+
+
+def _geometric(lo: float, hi: float, steps: Sequence[float]) -> Tuple[float, ...]:
+    out, scale = [], lo
+    while scale <= hi:
+        out.extend(s * scale for s in steps if s * scale <= hi)
+        scale *= 10.0
+    return tuple(sorted(set(round(v, 12) for v in out)))
+
+
+# Latency seconds: 10 µs … 60 s in 1/2.5/5 decade steps (FaaS invocations
+# span cold-start seconds down to sub-millisecond warm pipe round-trips).
+DEFAULT_LATENCY_BUCKETS = _geometric(1e-5, 10.0, (1.0, 2.5, 5.0)) + (30.0, 60.0)
+
+# Payload/frame bytes: 64 B … 64 MiB in powers of 4 (the 6 MB Lambda budget
+# sits inside the top decade).
+DEFAULT_BYTES_BUCKETS = tuple(float(64 * 4 ** i) for i in range(11))
+
+
+class _NullMetric:
+    """Shared do-nothing metric handed out while the registry is disabled."""
+
+    __slots__ = ()
+
+    def inc(self, n: int = 1) -> None:
+        pass
+
+    def set(self, value: float) -> None:
+        pass
+
+    def observe(self, value: float) -> None:
+        pass
+
+    def quantile(self, q: float) -> float:
+        return 0.0
+
+    @property
+    def value(self) -> float:
+        return 0.0
+
+    @property
+    def count(self) -> int:
+        return 0
+
+    @property
+    def sum(self) -> float:
+        return 0.0
+
+
+_NULL = _NullMetric()
+
+
+class Counter:
+    """Monotonically increasing event count."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._lock = threading.Lock()
+        self._value = 0
+
+    def inc(self, n: int = 1) -> None:
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> int:
+        return self._value
+
+
+class Gauge:
+    """Last-write-wins instantaneous value."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._value = 0.0
+
+    def set(self, value: float) -> None:
+        self._value = float(value)
+
+    def inc(self, n: float = 1) -> None:
+        self._value += n
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+
+class Histogram:
+    """Fixed-bucket histogram with interpolated quantile extraction.
+
+    ``buckets`` are increasing upper bounds; an implicit +inf bucket
+    catches overflow. ``quantile(q)`` interpolates linearly inside the
+    bucket containing rank ``q * count`` (lower edge 0 for the first
+    bucket, Prometheus-style); observations past the last finite bound
+    clamp to it, so quantiles never extrapolate beyond known bounds.
+    """
+
+    def __init__(self, name: str,
+                 buckets: Sequence[float] = DEFAULT_LATENCY_BUCKETS):
+        if list(buckets) != sorted(buckets) or len(buckets) < 1:
+            raise ValueError("histogram buckets must be increasing bounds")
+        self.name = name
+        self.bounds: Tuple[float, ...] = tuple(float(b) for b in buckets)
+        self._counts = [0] * (len(self.bounds) + 1)    # last = +inf overflow
+        self._lock = threading.Lock()
+        self._sum = 0.0
+        self._count = 0
+
+    def observe(self, value: float) -> None:
+        value = float(value)
+        idx = len(self.bounds)
+        for i, bound in enumerate(self.bounds):
+            if value <= bound:
+                idx = i
+                break
+        with self._lock:
+            self._counts[idx] += 1
+            self._sum += value
+            self._count += 1
+
+    @property
+    def count(self) -> int:
+        return self._count
+
+    @property
+    def sum(self) -> float:
+        return self._sum
+
+    def bucket_counts(self) -> Dict[str, int]:
+        out = {repr(b): c for b, c in zip(self.bounds, self._counts)}
+        out["+inf"] = self._counts[-1]
+        return out
+
+    def quantile(self, q: float) -> Optional[float]:
+        """Interpolated q-quantile (q in [0, 1]); None with no observations."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile {q} outside [0, 1]")
+        with self._lock:
+            total = self._count
+            counts = list(self._counts)
+        if total == 0:
+            return None
+        rank = q * total
+        cum = 0
+        for i, c in enumerate(counts[:-1]):
+            if cum + c >= rank and c > 0:
+                lo = self.bounds[i - 1] if i > 0 else 0.0
+                hi = self.bounds[i]
+                return lo + (hi - lo) * (rank - cum) / c
+            cum += c
+        return self.bounds[-1]        # mass in the +inf bucket clamps
+
+
+class MetricsRegistry:
+    """Named metric store; disabled instances hand out the null singleton."""
+
+    def __init__(self, enabled: bool = False):
+        self._enabled = enabled
+        self._lock = threading.Lock()
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._histograms: Dict[str, Histogram] = {}
+
+    # ------------------------------------------------------------- switches
+
+    @property
+    def enabled(self) -> bool:
+        return self._enabled
+
+    def enable(self) -> None:
+        self._enabled = True
+
+    def disable(self) -> None:
+        self._enabled = False
+
+    def reset(self) -> None:
+        """Drop every metric (tests isolate runs with this)."""
+        with self._lock:
+            self._counters.clear()
+            self._gauges.clear()
+            self._histograms.clear()
+
+    # ------------------------------------------------------------ accessors
+
+    def counter(self, name: str) -> Counter:
+        if not self._enabled:
+            return _NULL
+        c = self._counters.get(name)
+        if c is None:
+            with self._lock:
+                c = self._counters.setdefault(name, Counter(name))
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        if not self._enabled:
+            return _NULL
+        g = self._gauges.get(name)
+        if g is None:
+            with self._lock:
+                g = self._gauges.setdefault(name, Gauge(name))
+        return g
+
+    def histogram(self, name: str,
+                  buckets: Optional[Sequence[float]] = None) -> Histogram:
+        """Get-or-create; ``buckets`` only applies on first creation."""
+        if not self._enabled:
+            return _NULL
+        h = self._histograms.get(name)
+        if h is None:
+            with self._lock:
+                h = self._histograms.setdefault(
+                    name, Histogram(name, buckets or DEFAULT_LATENCY_BUCKETS))
+        return h
+
+    # ------------------------------------------------------------- snapshot
+
+    def snapshot(self) -> Dict:
+        """JSON-able view of every metric, with p50/p95/p99 per histogram."""
+        with self._lock:
+            counters = dict(self._counters)
+            gauges = dict(self._gauges)
+            histograms = dict(self._histograms)
+        return {
+            "counters": {n: c.value for n, c in sorted(counters.items())},
+            "gauges": {n: g.value for n, g in sorted(gauges.items())},
+            "histograms": {
+                n: {
+                    "count": h.count,
+                    "sum": h.sum,
+                    "p50": h.quantile(0.50),
+                    "p95": h.quantile(0.95),
+                    "p99": h.quantile(0.99),
+                    "buckets": h.bucket_counts(),
+                }
+                for n, h in sorted(histograms.items())
+            },
+        }
+
+
+# The process-global registry every instrumented module shares. Disabled by
+# default: the importing hot paths stay no-ops until a runtime (or a test)
+# flips it on.
+REGISTRY = MetricsRegistry(enabled=False)

@@ -2,7 +2,7 @@
 
 AdamW with decoupled weight decay, global-norm clipping, and cosine/linear
 warmup schedules. State dtype is configurable: fp32 moments by default,
-bf16 moments for memory-bound giants (arctic-480b — see DESIGN.md §4).
+bf16 moments for memory-bound giants (arctic-480b — see DESIGN.md §5).
 """
 
 from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,

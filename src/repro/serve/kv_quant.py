@@ -1,7 +1,7 @@
 """OSQ applied to the KV cache — the paper's technique as a serving feature.
 
 SQUASH's core move is scalar quantization with segment packing so sub-word
-codes realize their theoretical compression (DESIGN.md §4.ii). A KV cache is
+codes realize their theoretical compression (DESIGN.md §5.ii). A KV cache is
 dimension-structured exactly like the paper's vectors: per-(head, channel)
 value ranges are narrow and stable, so ``bits``-bit codes per channel with
 ``32 // bits`` codes packed per int32 lane word give a 4–8× HBM (and, more

@@ -39,6 +39,7 @@ __all__ = [
     "MAX_SYNC_PAYLOAD_BYTES", "OVERFLOW_POLICIES", "PayloadOverflowError",
     "encode_message", "decode_message", "chunk_request", "response_chunks",
     "predicates_to_json", "predicates_from_json",
+    "OBS_EXTRA_KEY", "inject_span_context", "extract_span_context",
     "FRAME_INIT", "FRAME_REQ", "FRAME_RESP", "FRAME_PING", "FRAME_PONG",
     "FRAME_SHUTDOWN", "write_frame", "read_frame",
 ]
@@ -163,6 +164,38 @@ def response_chunks(nbytes: int, *, max_bytes: int, policy: str) -> int:
             f"response payload of {nbytes} B exceeds the {max_bytes} B budget "
             "(overflow policy 'error')")
     return -(-nbytes // max_bytes)
+
+
+# ------------------------------------------------------- span-context envelope
+
+# Key under which a distributed-trace span context rides the invocation's
+# ``extra`` envelope. The context travels *outside* the budgeted payload —
+# pickled with ``extra`` over process pipes, as JSON meta inside the socket
+# REQ frame's codec wrapper (FRAME_SLACK headroom) — so request-byte
+# accounting and the 6 MB budget are bitwise-identical with tracing on or
+# off. The value is a plain ``{"run": ..., "span": ...}`` dict
+# (``repro.obs.spans.SpanContext.to_wire``); this module stays
+# dependency-free by not importing the obs layer.
+OBS_EXTRA_KEY = "obs"
+
+
+def inject_span_context(extra: Dict, ctx: Dict) -> Dict:
+    """Attach a span context to an invocation's ``extra`` envelope.
+
+    Mutates and returns ``extra``. A falsy ``ctx`` (tracing disabled) leaves
+    the envelope untouched, so disabled runs serialize identical bytes.
+    """
+    if ctx:
+        extra[OBS_EXTRA_KEY] = dict(ctx)
+    return extra
+
+
+def extract_span_context(extra) -> Dict:
+    """The span context carried by ``extra``, or None (worker side)."""
+    if not extra:
+        return None
+    ctx = extra.get(OBS_EXTRA_KEY)
+    return dict(ctx) if ctx else None
 
 
 # ------------------------------------------------------------ socket frames

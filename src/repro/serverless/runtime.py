@@ -71,6 +71,9 @@ from repro.core.attributes import Predicate
 from repro.core.cost_model import PricingConstants
 from repro.core.dre import ContainerPool, DreStats, Lease, ResultCache
 from repro.core.pipeline import SearchStats, SquashIndex
+from repro.obs.export import InMemoryExporter, JsonlExporter, run_record
+from repro.obs.metrics import REGISTRY as _METRICS
+from repro.obs.spans import Recorder
 from repro.serverless import nodes as nd
 from repro.serverless import payload as pl
 from repro.serverless import transport as tp
@@ -139,6 +142,15 @@ class RuntimeConfig:
     mem_qa_mb: int = 1770
     mem_qp_mb: int = 1770
     prices: PricingConstants = dataclasses.field(default_factory=PricingConstants)
+
+    # Observability (repro.obs). Off by default and zero-cost when off; ids,
+    # SearchStats and all traces are bitwise-identical with it on or off
+    # (the span context rides the transport envelope, never the budgeted
+    # payload). ``obs_enabled=True`` also enables the process-global metrics
+    # REGISTRY for the process lifetime (enabling is one-way here — tests
+    # that need isolation call ``REGISTRY.disable()``/``reset()`` directly).
+    obs_enabled: bool = False
+    obs_trace_path: Optional[str] = None  # JSONL trace file; None → in-memory
 
     dataset_tag: str = "dataset"       # DRE singleton key prefix
     seed: int = 0
@@ -254,6 +266,22 @@ class ServerlessRuntime:
         self._planes: Dict = {}
         self._trace_counter = [0]
         self._transport: Optional[tp.Transport] = None
+        self._obs_exporter = None
+        if self.cfg.obs_enabled:
+            _METRICS.enable()
+
+    @property
+    def obs_exporter(self):
+        """Trace sink for obs-enabled runs: a JSONL file when
+        ``obs_trace_path`` is set, else an in-memory exporter whose
+        ``records`` tests inspect. None when observability is off."""
+        if not self.cfg.obs_enabled:
+            return None
+        if self._obs_exporter is None:
+            self._obs_exporter = (
+                JsonlExporter(self.cfg.obs_trace_path)
+                if self.cfg.obs_trace_path else InMemoryExporter())
+        return self._obs_exporter
 
     # ------------------------------------------------------------- transport
 
@@ -485,6 +513,7 @@ class _Execution:
         self.cache_misses = 0
         self.out_ids = np.full((qn, k), -1, dtype=np.int64)
         self.out_dists = np.full((qn, k), np.inf, dtype=np.float64)
+        self.rec = Recorder() if rt.cfg.obs_enabled else None
         self.wall0 = time.perf_counter()
 
     # ------------------------------------------------------------- utilities
@@ -541,6 +570,50 @@ class _Execution:
                     worker_host="",
                     retries=0)
 
+    # -------------------------------------------------------------- tracing
+
+    def _ctx(self, sid: Optional[str]) -> Optional[Dict]:
+        """Wire span context for one invocation, or None when obs is off."""
+        if self.rec is None or sid is None:
+            return None
+        return {"run": self.rec.run_id, "span": sid}
+
+    def _record_node_span(self, sid, parent_sid, name, kind, ci, t_issue,
+                          t_start, t_avail, t_end, inv, fetch_s, compute_s,
+                          warm, wallkw, winfo) -> None:
+        """Stitch one node invocation into the run's span tree.
+
+        Records the node span on the modeled clock with its derived phase
+        children (issue → wire → fetch → compute → respond), then grafts the
+        worker-reported wall-clock sub-spans beneath it — but only when the
+        worker echoed back *this* run and parent span id, so a stale or
+        foreign report can never stitch into the wrong tree.
+        """
+        rec = self.rec
+        if rec is None or sid is None:
+            return
+        rec.record(name, t_issue, t_end, span_id=sid, parent_id=parent_sid,
+                   kind=kind, chunk=ci, warm=bool(warm),
+                   retries=int(wallkw.get("retries", 0)),
+                   worker_pid=int(wallkw.get("worker_pid", 0)),
+                   worker_host=wallkw.get("worker_host", ""))
+        rec.record("issue", t_issue, t_issue + inv, parent_id=sid, phase=True)
+        rec.record("wire", t_issue + inv, t_start, parent_id=sid, phase=True)
+        if fetch_s > 0:
+            rec.record("fetch", t_start, t_start + fetch_s, parent_id=sid,
+                       phase=True)
+        rec.record("compute", t_avail, t_avail + compute_s, parent_id=sid,
+                   phase=True)
+        rec.record("respond", t_avail + compute_s, t_end, parent_id=sid,
+                   phase=True)
+        wspans = winfo.spans if winfo is not None else None
+        if (wspans and wspans.get("run") == rec.run_id
+                and wspans.get("parent") == sid):
+            base = float(wallkw.get("wall_start_s", 0.0))
+            for mname, m0, m1 in wspans.get("spans", ()):
+                rec.record(f"worker.{mname}", base + float(m0),
+                           base + float(m1), parent_id=sid, clock="wall")
+
     # ------------------------------------------------------------------ run
 
     def run(self, queries: np.ndarray, predicates: List[Predicate]
@@ -557,9 +630,10 @@ class _Execution:
             self.out_ids[rows] = resp["ids"]
             self.out_dists[rows] = resp["dists"]
 
+        root_sid = self.rec.new_span_id() if self.rec is not None else None
         self._invoke_allocator(self.rt.topology[-1], root_req,
                                t_issue=0.0, parent="client",
-                               respond=root_respond)
+                               respond=root_respond, parent_sid=root_sid)
         makespan = self.loop.run()
         measured = time.perf_counter() - self.wall0
         trace = assemble_run_trace(
@@ -570,6 +644,18 @@ class _Execution:
             mem_co_mb=self.cfg.mem_co_mb, prices=self.cfg.prices,
             cache_hits=self.cache_hits, cache_misses=self.cache_misses,
             transport=self.cfg.transport, measured_makespan_s=measured)
+        if self.rec is not None:
+            self.rec.record("search", 0.0, makespan, span_id=root_sid,
+                            transport=self.cfg.transport, queries=self.qn,
+                            k=self.k)
+            exporter = self.rt.obs_exporter
+            if exporter is not None:
+                exporter.export(run_record(
+                    self.rec, run_trace=trace,
+                    meta={"transport": self.cfg.transport,
+                          "queries": self.qn, "k": self.k,
+                          "makespan_s": makespan,
+                          "measured_makespan_s": measured}))
         return SearchResult(ids=self.out_ids, dists=self.out_dists,
                             stats=self.stats, trace=trace)
 
@@ -582,6 +668,7 @@ class _Execution:
         t_issue: float,
         parent: str,
         respond: Callable[[Dict], None],
+        parent_sid: Optional[str] = None,
     ) -> float:
         """Issue one logical CO/QA invocation (possibly chunked).
 
@@ -608,6 +695,7 @@ class _Execution:
 
         launch_s = 0.0
         for ci, (creq, buf) in enumerate(chunks):
+            sid = self.rec.new_span_id() if self.rec is not None else None
             pinv, lease = None, None
             if kind == "co":
                 # The Coordinator runs where the runtime lives (it fronts
@@ -615,7 +703,9 @@ class _Execution:
                 warm, hit, fetch_s = True, False, 0.0
             elif self.real:
                 pinv = self.transport.submit(
-                    "qa", payload=buf, extra={"olo": olo, "ohi": ohi})
+                    "qa", payload=buf,
+                    extra=pl.inject_span_context(
+                        {"olo": olo, "ohi": ohi}, self._ctx(sid)))
                 warm = pinv.predicted_warm
                 hit, fetch_s = warm, 0.0       # refined from the worker report
             else:
@@ -635,17 +725,19 @@ class _Execution:
             # path of every hop, not just in the byte accounting.
             self.loop.at(t_start, lambda buf=buf, lease=lease, pinv=pinv,
                          warm=warm, hit=hit, fetch_s=fetch_s, inv=inv,
-                         ci=ci, t_i=t_i, t_start=t_start:
+                         ci=ci, t_i=t_i, t_start=t_start, sid=sid:
                          self._allocator_handler(
                              spec, kind, name, parent, ci,
                              pl.decode_message(buf), len(buf),
                              lease, pinv, warm, hit, fetch_s, inv, t_i,
-                             t_start, chunk_done))
+                             t_start, chunk_done,
+                             sid=sid, parent_sid=parent_sid))
         return launch_s
 
     def _allocator_handler(
         self, spec, kind, name, parent, ci, creq, req_bytes, lease, pinv,
         warm, hit, fetch_s, inv, t_issue, t_start, respond_chunk,
+        sid=None, parent_sid=None,
     ) -> None:
         cfg = self.cfg
         t0 = time.perf_counter()
@@ -695,7 +787,9 @@ class _Execution:
             self._merge_real_dre(winfo, self.rt.qa_data_bytes())
         else:
             pinv = self.transport.submit(
-                "qa", request=creq, extra={"olo": olo, "ohi": ohi})
+                "qa", request=creq,
+                extra=pl.inject_span_context(
+                    {"olo": olo, "ohi": ohi}, self._ctx(sid)))
             presp, winfo = pinv.result()
         t1 = time.perf_counter()
         measured = (winfo.compute_s if (self.real and winfo is not None)
@@ -751,6 +845,10 @@ class _Execution:
                 warm=warm, dre_hit=hit, queries=int(full_qidx.shape[0]),
                 own_queries=m_own, response_chunks=n_pages,
                 cache_hits=len(hit_entries), **wallkw))
+            self._record_node_span(
+                sid, parent_sid, name, kind, ci, t_issue, t_start,
+                t_avail, t_end, inv, fetch_s, compute_s, warm, wallkw,
+                winfo)
             if lease is not None:
                 self.loop.at(t_end, lambda: self.rt.qa_pool.release(lease))
             self.loop.at(t_end + self._tx(len(rbuf)),
@@ -787,11 +885,11 @@ class _Execution:
 
             if cfg.sequential and kind == "co":
                 seq_t += self._invoke_allocator(ch, subreq, seq_t, name,
-                                                child_done)
+                                                child_done, parent_sid=sid)
             else:
                 self._invoke_allocator(
                     ch, subreq, t_avail + i * cfg.invoke_stagger_s, name,
-                    child_done)
+                    child_done, parent_sid=sid)
 
         for j, pid in enumerate(sorted(qp_requests)):
             qreq = qp_requests[pid]
@@ -804,7 +902,7 @@ class _Execution:
 
             self._invoke_processor(pid, qreq,
                                    t_ready + j * cfg.invoke_stagger_s,
-                                   name, qp_done)
+                                   name, qp_done, parent_sid=sid)
 
         if pending["n"] == 0:
             self.loop.at(t_ready, finalize)
@@ -818,6 +916,7 @@ class _Execution:
         t_issue: float,
         parent: str,
         respond: Callable[[Dict], None],
+        parent_sid: Optional[str] = None,
     ) -> None:
         cfg = self.cfg
         chunks = pl.chunk_request(
@@ -837,11 +936,13 @@ class _Execution:
                 respond({"qidx": req["qidx"], "ids": ids, "dists": dists})
 
         for ci, (creq, buf) in enumerate(chunks):
+            sid = self.rec.new_span_id() if self.rec is not None else None
             pinv, lease = None, None
             if self.real:
                 pinv = self.transport.submit(
                     f"qp:{pid}", payload=buf,
-                    extra={"sleep_s": cfg.worker_sleep_s})
+                    extra=pl.inject_span_context(
+                        {"sleep_s": cfg.worker_sleep_s}, self._ctx(sid)))
                 warm = pinv.predicted_warm
             else:
                 lease = self._acquire(
@@ -855,16 +956,18 @@ class _Execution:
             # Local handlers decode the wire bytes at collection (codec on
             # the hop's real path); process workers decode in-process.
             self.loop.at(t_start, lambda lease=lease, pinv=pinv,
-                         buf=buf, inv=inv, ci=ci, t_i=t_i, t_start=t_start:
+                         buf=buf, inv=inv, ci=ci, t_i=t_i, t_start=t_start,
+                         sid=sid:
                          self._processor_handler(
                              pid, parent, ci,
                              None if pinv else pl.decode_message(buf),
                              len(buf), lease, pinv,
-                             inv, t_i, t_start, chunk_done))
+                             inv, t_i, t_start, chunk_done,
+                             sid=sid, parent_sid=parent_sid))
 
     def _processor_handler(
         self, pid, parent, ci, creq, req_bytes, lease, pinv, inv, t_issue,
-        t_start, respond_chunk,
+        t_start, respond_chunk, sid=None, parent_sid=None,
     ) -> None:
         cfg = self.cfg
         t0 = time.perf_counter()
@@ -898,8 +1001,10 @@ class _Execution:
                 else:
                     pool.retain_derived(lease, dkey)
             raw, linfo = self.transport.submit(
-                f"qp:{pid}", request=creq, extra={}).result()
+                f"qp:{pid}", request=creq,
+                extra=pl.inject_span_context({}, self._ctx(sid))).result()
             resp, counters = raw
+            winfo = linfo
             measured = linfo.compute_s
             t1 = time.perf_counter()
         t_avail = t_start + fetch_s + setup_s
@@ -921,6 +1026,7 @@ class _Execution:
                                      policy=cfg.overflow)
         t_end += (n_pages - 1) * cfg.invoke_latency_warm_s
         nq = int(resp["qidx"].shape[0])
+        wallkw = self._wall_kw(winfo if self.real else None, t0, t1)
         self.nodes.append(NodeTrace(
             node=f"qp:{pid}", kind="qp", parent=parent, chunk=ci,
             t_issue=t_issue, t_start=t_start, t_end=t_end,
@@ -932,7 +1038,10 @@ class _Execution:
             hamming_in=counters["hamming_in"],
             hamming_kept=counters["hamming_kept"],
             adc_evals=counters["adc_evals"],
-            **self._wall_kw(winfo, t0, t1)))
+            **wallkw))
+        self._record_node_span(
+            sid, parent_sid, f"qp:{pid}", "qp", ci, t_issue, t_start,
+            t_avail, t_end, inv, fetch_s, compute_s, warm, wallkw, winfo)
         if lease is not None:
             self.loop.at(t_end, lambda: self.rt.qp_pools[pid].release(lease))
         self.loop.at(t_end + self._tx(len(rbuf)),

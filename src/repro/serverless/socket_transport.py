@@ -44,6 +44,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.metrics import DEFAULT_BYTES_BUCKETS
+from repro.obs.metrics import REGISTRY as _METRICS
 from repro.serverless import payload as pl
 from repro.serverless import transport as tr
 from repro.serverless import workers as wk
@@ -267,6 +269,9 @@ class SocketTransport(tr.Transport):
             raise pl.PayloadOverflowError(
                 f"invocation payload of {len(payload)} B exceeds the "
                 f"{self.max_payload_bytes} B budget")
+        _METRICS.counter("transport.socket.submits").inc()
+        _METRICS.histogram("transport.socket.request_bytes",
+                           buckets=DEFAULT_BYTES_BUCKETS).observe(len(payload))
         pending = tr._Pending(next(self._rid), fn, payload, dict(extra or {}))
         with self._lock:
             if self._closed:
@@ -309,6 +314,9 @@ class SocketTransport(tr.Transport):
                     pl.write_frame(sock, pl.FRAME_REQ, body,
                                    max_bytes=self.max_payload_bytes
                                    + pl.FRAME_SLACK)
+                _METRICS.histogram(
+                    "transport.socket.frame_bytes",
+                    buckets=DEFAULT_BYTES_BUCKETS).observe(len(body))
                 pending.sent = True
                 pending.t_sent = time.perf_counter()
             except (OSError, ConnectionError):
@@ -322,6 +330,9 @@ class SocketTransport(tr.Transport):
                 kind, body = pl.read_frame(sock)
                 link.last_seen = time.perf_counter()
                 if kind == pl.FRAME_RESP:
+                    _METRICS.histogram(
+                        "transport.socket.frame_bytes",
+                        buckets=DEFAULT_BYTES_BUCKETS).observe(len(body))
                     self._on_response(link, body)
                 # PONG (and anything else) only refreshes liveness
         except (OSError, ConnectionError, ValueError):
@@ -381,6 +392,7 @@ class SocketTransport(tr.Transport):
                 try:
                     with link.send_lock:
                         pl.write_frame(sock, pl.FRAME_PING)
+                    _METRICS.counter("transport.socket.heartbeats").inc()
                 except (OSError, ConnectionError):
                     self._on_link_failure(link, link.generation)
 
@@ -417,6 +429,9 @@ class SocketTransport(tr.Transport):
                     continue
                 p.sent = False
                 resend.append(p)
+        _METRICS.counter("transport.socket.reconnects").inc()
+        if resend:
+            _METRICS.counter("transport.socket.retries").inc(len(resend))
         if old is not None:
             try:
                 old.close()

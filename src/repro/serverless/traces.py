@@ -21,6 +21,13 @@ from repro.core.pipeline import SearchStats
 __all__ = ["NodeTrace", "RunTrace", "assemble_run_trace"]
 
 
+def _from_fields(cls, data: Dict):
+    """Build a dataclass from a dict, ignoring unknown keys (forward
+    compatibility: a trace written by a newer build still loads)."""
+    names = {f.name for f in dataclasses.fields(cls)}
+    return cls(**{k: v for k, v in data.items() if k in names})
+
+
 @dataclasses.dataclass
 class NodeTrace:
     """One invocation's timeline (virtual seconds) and payload accounting."""
@@ -70,6 +77,14 @@ class NodeTrace:
         """Lambda bills wall time from handler entry to response."""
         return max(self.t_end - self.t_start, 0.0)
 
+    def to_json(self) -> Dict:
+        """Plain JSON-able dict (all fields are scalars already)."""
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(data: Dict) -> "NodeTrace":
+        return _from_fields(NodeTrace, data)
+
 
 @dataclasses.dataclass
 class RunTrace:
@@ -108,6 +123,29 @@ class RunTrace:
     def worker_hosts(self) -> List[str]:
         """Distinct hosts that served this run (socket transport; else [])."""
         return sorted({n.worker_host for n in self.nodes if n.worker_host})
+
+    def to_json(self) -> Dict:
+        """JSON-able dict; inverse of :meth:`from_json`.
+
+        ``cost`` is already a plain dict; the nested dataclasses
+        (``nodes``/``dre``/``stats``/``fleet``) flatten via ``asdict``.
+        """
+        out = dataclasses.asdict(self)
+        out["nodes"] = [n.to_json() for n in self.nodes]
+        out["fleet"] = (None if self.fleet is None
+                        else dataclasses.asdict(self.fleet))
+        return out
+
+    @staticmethod
+    def from_json(data: Dict) -> "RunTrace":
+        data = dict(data)
+        data["nodes"] = [NodeTrace.from_json(n) for n in data.get("nodes", ())]
+        data["dre"] = _from_fields(DreStats, data.get("dre") or {})
+        data["stats"] = _from_fields(SearchStats, data.get("stats") or {})
+        fleet = data.get("fleet")
+        data["fleet"] = None if fleet is None else _from_fields(LambdaFleet,
+                                                                fleet)
+        return _from_fields(RunTrace, data)
 
 
 def assemble_run_trace(

@@ -41,6 +41,8 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.obs.metrics import DEFAULT_BYTES_BUCKETS
+from repro.obs.metrics import REGISTRY as _METRICS
 from repro.serverless import payload as pl
 from repro.serverless import workers as wk
 
@@ -78,6 +80,12 @@ class InvokeInfo:
     wall_sent: float
     wall_done: float
     host: str = ""       # "host:port" that served it (SocketTransport only)
+    # Worker-side sub-spans for distributed tracing: the ``info["obs"]``
+    # dict the worker shipped back ({"run", "parent", "spans": [[name, t0,
+    # t1], ...]} with offsets relative to handler entry), or None when the
+    # request carried no span context. The runtime stitches these into the
+    # RunTrace's span tree; nothing else reads them.
+    spans: Optional[Dict] = None
 
 
 class Transport:
@@ -118,10 +126,22 @@ class _LocalInvocation:
         role = self.fn.split(":", 1)[0]
         resp = self._transport.handlers[role](self.fn, req, self.extra)
         t1 = time.perf_counter()
+        spans = None
+        ctx = pl.extract_span_context(self.extra)
+        if ctx is not None:
+            # Inline execution has no worker boundary; synthesize the one
+            # sub-span that exists (the handler body) so traces from all
+            # three transports stitch through the same code path.
+            spans = {"run": ctx["run"], "parent": ctx["span"],
+                     "spans": [["compute", 0.0, t1 - t0]]}
+        _METRICS.counter("transport.local.submits").inc()
+        _METRICS.histogram("transport.local.invoke_s").observe(
+            t1 - self.t_submit)
         info = InvokeInfo(
             os_pid=os.getpid(), warm=False, state_hit=False,
             fetch_s=0.0, compute_s=t1 - t0, retries=0,
-            wall_submit=self.t_submit, wall_sent=t0, wall_done=t1)
+            wall_submit=self.t_submit, wall_sent=t0, wall_done=t1,
+            spans=spans)
         return resp, info
 
 
@@ -234,6 +254,7 @@ class _ProcessInvocation:
                         t._timed_out[p.rid] = p.worker
                     timed_out = True
             if timed_out:
+                _METRICS.counter(f"transport.{t.kind}.timeouts").inc()
                 raise TransportError(
                     f"invocation of {p.fn!r} timed out after "
                     f"{t.invoke_timeout_s:.0f}s (worker pool hung?)")
@@ -241,6 +262,8 @@ class _ProcessInvocation:
             raise p.error
         data, winfo = p.value
         resp = pl.decode_message(data)
+        _METRICS.histogram(f"transport.{t.kind}.invoke_s").observe(
+            p.t_done - p.t_submit)
         info = InvokeInfo(
             os_pid=int(winfo["os_pid"]),
             warm=int(winfo["served_before"]) > 0,
@@ -250,7 +273,8 @@ class _ProcessInvocation:
             retries=p.retries,
             wall_submit=p.t_submit,
             wall_sent=p.t_sent or p.t_submit,
-            wall_done=p.t_done)
+            wall_done=p.t_done,
+            spans=winfo.get("obs"))
         return resp, info
 
 
@@ -294,6 +318,9 @@ class ProcessTransport(Transport):
     def submit(self, fn, *, request=None, payload=None, extra=None):
         if payload is None:
             payload = pl.encode_message(request)
+        _METRICS.counter(f"transport.{self.kind}.submits").inc()
+        _METRICS.histogram(f"transport.{self.kind}.request_bytes",
+                           buckets=DEFAULT_BYTES_BUCKETS).observe(len(payload))
         pending = _Pending(next(self._rid), fn, payload, dict(extra or {}))
         deadline = time.perf_counter() + min(self.invoke_timeout_s, 30.0)
         while True:
@@ -391,6 +418,10 @@ class ProcessTransport(Transport):
             self._on_worker_failure(worker)
             return
         rid, ok, data, winfo = msg
+        if ok:
+            _METRICS.histogram(
+                f"transport.{self.kind}.response_bytes",
+                buckets=DEFAULT_BYTES_BUCKETS).observe(len(data))
         with self._lock:
             pending = self._pending.pop(rid, None)
             if pending is not None:
@@ -450,6 +481,7 @@ class ProcessTransport(Transport):
                 return
             self._respawning[worker.fn] = \
                 self._respawning.get(worker.fn, 0) + 1
+        _METRICS.counter(f"transport.{self.kind}.respawns").inc()
         try:
             replacement = _Worker(self._ctx, worker.init)
         except Exception as exc:                     # spawn itself failed
@@ -488,6 +520,9 @@ class ProcessTransport(Transport):
                     p.sent = False
                     replacement.assigned += 1
                     resend.append(p)
+        if resend:
+            _METRICS.counter(
+                f"transport.{self.kind}.retries").inc(len(resend))
         for p in resend:
             self._send(p)
         self._reap(worker)

@@ -254,6 +254,15 @@ class RequestServer:
     evidence — counting only successes made the parent book a cold start
     (``warm=False`` with ``state_hit=True``) for a container that
     demonstrably retained its singleton.
+
+    When the request's ``extra`` carries a span context
+    (``payload.extract_span_context``), the worker additionally times its
+    internal segments — singleton fetch, payload deserialize, handler
+    compute, response serialize — and ships them back as
+    ``info["obs"] = {"run", "parent", "spans": [[name, t0, t1], ...]}``
+    with offsets relative to handler entry, echoing the received context so
+    the client can verify the stitch. Without a context none of this runs —
+    tracing is strictly opt-in per request.
     """
 
     def __init__(self, init: WorkerInit):
@@ -263,6 +272,8 @@ class RequestServer:
 
     def handle(self, payload: bytes, extra: Optional[Dict]):
         extra = extra or {}
+        obs_ctx = pl.extract_span_context(extra)
+        marks = [] if obs_ctx is not None else None
         info = {"os_pid": os.getpid(), "served_before": self.served}
         self.served += 1
         try:
@@ -271,11 +282,16 @@ class RequestServer:
                 self.state = _build_state(self.init)
                 info["fetch_s"] = time.perf_counter() - t0
                 info["state_hit"] = False
+                if marks is not None:
+                    marks.append(["fetch", 0.0, info["fetch_s"]])
             else:
                 info["fetch_s"] = 0.0
                 info["state_hit"] = True
+            td = time.perf_counter()
             creq = pl.decode_message(payload)
             t1 = time.perf_counter()
+            if marks is not None:
+                marks.append(["deserialize", td - t0, t1 - t0])
             sleep_s = float(extra.get("sleep_s") or 0.0)
             if sleep_s > 0.0:
                 time.sleep(sleep_s)      # emulated busy time (benches/tests)
@@ -284,8 +300,16 @@ class RequestServer:
                     self.state, creq, int(extra["olo"]), int(extra["ohi"])))
             else:
                 wire = pack_qp_response(*qp_compute(self.state, creq))
-            info["compute_s"] = time.perf_counter() - t1
-            return True, pl.encode_message(wire), info
+            t2 = time.perf_counter()
+            info["compute_s"] = t2 - t1
+            data = pl.encode_message(wire)
+            if marks is not None:
+                t3 = time.perf_counter()
+                marks.append(["compute", t1 - t0, t2 - t0])
+                marks.append(["serialize", t2 - t0, t3 - t0])
+                info["obs"] = {"run": obs_ctx["run"],
+                               "parent": obs_ctx["span"], "spans": marks}
+            return True, data, info
         except Exception:                            # noqa: BLE001
             info.setdefault("fetch_s", 0.0)
             info.setdefault("state_hit", self.state is not None)

@@ -69,6 +69,7 @@ _AUTO_MARKS = {
     "test_system": ("slow",),
     "test_archs": ("slow",),
     "test_transport": ("transport",),
+    "test_obs_transport": ("transport",),
 }
 
 

@@ -1,0 +1,263 @@
+"""Tier-1 observability tests: metrics, spans, exporters, parity (local).
+
+Pins the PR-7 contracts that don't need real worker processes:
+
+* Histogram quantile *exactness* on hand-computable distributions
+  (Prometheus-style interpolation inside the containing bucket, clamp at
+  the last finite bound for +inf mass).
+* The disabled registry hands out one shared no-op singleton — enabling
+  is what turns call sites into real instruments.
+* Span-context wire round-trip through the transport ``extra`` envelope
+  (``payload.inject_span_context`` / ``extract_span_context``) and the
+  invariant that injection never touches the budgeted payload bytes.
+* Exporters: in-memory, JSONL append + ``read_jsonl``, timeline render.
+* ``NodeTrace``/``RunTrace`` JSON round-trip on a real (tiny) run.
+* Local-transport bitwise parity: ids and ``SearchStats`` identical with
+  observability off and on, and the obs-on run yields a stitched span
+  tree with all three node kinds.
+* ``safe_ratio`` guard for modeled-vs-measured ratios.
+
+The real-transport parity/stitching/crash-counter tests live in
+``tests/test_obs_transport.py`` (transport tier).
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.obs.export import InMemoryExporter, JsonlExporter, read_jsonl, \
+    run_record
+from repro.obs.metrics import DEFAULT_BYTES_BUCKETS, \
+    DEFAULT_LATENCY_BUCKETS, Histogram, MetricsRegistry, REGISTRY, _NULL
+from repro.obs.spans import Recorder, Span, SpanContext
+from repro.obs.timeline import render_record, render_records
+from repro.serverless import payload as pl
+from repro.serverless.runtime import RuntimeConfig, ServerlessRuntime
+from repro.serverless.traces import RunTrace
+
+
+# --------------------------------------------------------------- histograms
+
+
+def test_histogram_quantiles_exact():
+    h = Histogram("h", buckets=(1.0, 2.0, 4.0))
+    for v in (0.5, 1.5, 3.0, 3.5):
+        h.observe(v)
+    # counts: (0,1]=1, (1,2]=1, (2,4]=2; interpolation is exact here.
+    assert h.count == 4
+    assert h.quantile(0.50) == pytest.approx(2.0)
+    assert h.quantile(0.75) == pytest.approx(3.0)
+    assert h.quantile(0.0) is not None
+    assert h.quantile(1.0) == pytest.approx(4.0)
+
+
+def test_histogram_overflow_clamps_to_last_bound():
+    h = Histogram("h", buckets=(1.0, 2.0, 4.0))
+    h.observe(0.5)
+    h.observe(100.0)                       # lands in the +inf bucket
+    assert h.bucket_counts()["+inf"] == 1
+    # quantiles never extrapolate past the last finite bound
+    assert h.quantile(1.0) == pytest.approx(4.0)
+
+
+def test_histogram_empty_and_validation():
+    h = Histogram("h", buckets=(1.0, 2.0))
+    assert h.quantile(0.5) is None
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+    with pytest.raises(ValueError):
+        Histogram("bad", buckets=(2.0, 1.0))
+
+
+def test_default_buckets_shape():
+    assert DEFAULT_LATENCY_BUCKETS == tuple(sorted(DEFAULT_LATENCY_BUCKETS))
+    assert DEFAULT_LATENCY_BUCKETS[-2:] == (30.0, 60.0)
+    assert DEFAULT_BYTES_BUCKETS[0] == 64.0
+    # 6 MB Lambda payload budget sits inside the covered range
+    assert DEFAULT_BYTES_BUCKETS[-1] >= 6 * 2**20
+
+
+# ----------------------------------------------------------------- registry
+
+
+def test_disabled_registry_is_noop_singleton():
+    reg = MetricsRegistry(enabled=False)
+    c = reg.counter("x")
+    assert c is _NULL
+    assert c is reg.histogram("y") is reg.gauge("z")
+    c.inc(10)
+    assert c.value == 0 and c.count == 0 and c.sum == 0.0
+    assert c.quantile(0.99) == 0.0
+    assert reg.snapshot() == {"counters": {}, "gauges": {},
+                              "histograms": {}}
+
+
+def test_enabled_registry_real_instruments_and_snapshot():
+    reg = MetricsRegistry(enabled=True)
+    reg.counter("a.b").inc()
+    reg.counter("a.b").inc(2)
+    reg.gauge("g").set(7.5)
+    reg.histogram("h", buckets=(1.0, 2.0)).observe(0.5)
+    snap = reg.snapshot()
+    assert snap["counters"]["a.b"] == 3
+    assert snap["gauges"]["g"] == 7.5
+    assert snap["histograms"]["h"]["count"] == 1
+    json.dumps(snap)                       # snapshot must be JSON-able
+    reg.reset()
+    assert reg.snapshot()["counters"] == {}
+
+
+def test_global_registry_disabled_by_default():
+    assert REGISTRY.enabled is False
+    assert REGISTRY.counter("anything") is _NULL
+
+
+# -------------------------------------------------------------------- spans
+
+
+def test_span_json_round_trip():
+    s = Span(name="qp:0", span_id="s3", parent_id="s1", t0=0.5, t1=1.25,
+             attrs={"kind": "qp", "chunk": 0})
+    assert Span.from_json(s.to_json()) == s
+
+
+def test_recorder_ids_and_children():
+    rec = Recorder(run_id="r1")
+    root = rec.record("search", 0.0, 1.0)
+    sid = rec.new_span_id()
+    rec.record("qa:0", 0.1, 0.9, span_id=sid, parent_id=root, kind="qa")
+    assert {s.span_id for s in rec.spans} == {root, sid}
+    assert [s.name for s in rec.children(root)] == ["qa:0"]
+    assert rec.by_name("search")[0].parent_id is None
+
+
+def test_span_context_wire_round_trip_via_envelope():
+    ctx = Recorder(run_id="abc").context("s7")
+    extra = {"olo": 0, "ohi": 4}
+    out = pl.inject_span_context(extra, ctx.to_wire())
+    assert out is extra                       # in-place, same envelope dict
+    assert pl.extract_span_context(extra) == {"run": "abc", "span": "s7"}
+    assert SpanContext.from_wire(pl.extract_span_context(extra)) == \
+        SpanContext("abc", "s7")
+    # absent / falsy context leaves the envelope untouched
+    clean = {"olo": 0}
+    assert pl.inject_span_context(clean, None) == {"olo": 0}
+    assert pl.extract_span_context(clean) is None
+
+
+# ---------------------------------------------------------------- exporters
+
+
+def test_exporters_and_read_jsonl(tmp_path):
+    rec = Recorder(run_id="runA")
+    rec.record("search", 0.0, 1.0)
+    record = run_record(rec, meta={"transport": "local"})
+    mem = InMemoryExporter()
+    mem.export(record)
+    assert mem.records == [record]
+
+    path = str(tmp_path / "trace.jsonl")
+    jl = JsonlExporter(path)
+    jl.export(record)
+    jl.export(record)                         # append mode: one line each
+    back = read_jsonl(path)
+    assert len(back) == 2
+    assert back[0]["run"] == "runA"
+    assert back[0]["spans"][0]["name"] == "search"
+    assert back[0]["meta"] == {"transport": "local"}
+
+
+def test_timeline_renders_record():
+    rec = Recorder(run_id="runB")
+    root = rec.record("search", 0.0, 2.0, transport="local")
+    sid = rec.new_span_id()
+    rec.record("qp:0", 0.2, 1.8, span_id=sid, parent_id=root, kind="qp",
+               warm=True, retries=0)
+    rec.record("compute", 0.3, 1.5, parent_id=sid, phase=True)
+    text = render_record(run_record(rec, meta={"transport": "local"}))
+    assert "runB" in text and "qp:0" in text
+    assert render_records([run_record(rec)])  # multi-record wrapper works
+
+
+# ------------------------------------------------------- trace JSON + parity
+
+
+def _tiny_runtime(**overrides):
+    from benchmarks.common import build_tiny_squash_index
+
+    ds, preds, idx = build_tiny_squash_index(
+        scale=0.003, num_queries=8, num_partitions=3, seed=7)
+    cfg = RuntimeConfig(branching=2, max_level=1, **overrides)
+    return ds, preds, ServerlessRuntime(idx, cfg)
+
+
+def test_run_trace_json_round_trip():
+    ds, preds, rt = _tiny_runtime()
+    trace = rt.search(ds.queries, preds, k=10).trace
+    blob = json.dumps(trace.to_json())        # must be pure-JSON already
+    back = RunTrace.from_json(json.loads(blob))
+    assert back.makespan_s == trace.makespan_s
+    assert len(back.nodes) == len(trace.nodes)
+    assert [n.node for n in back.nodes] == [n.node for n in trace.nodes]
+    assert back.nodes[0].t_start == trace.nodes[0].t_start
+    assert back.stats == trace.stats
+    assert back.fleet == trace.fleet
+    assert back.to_json() == trace.to_json()
+
+
+def test_local_obs_parity_and_span_tree():
+    # Pinned busy times: the modeled timeline then depends only on the
+    # choreography, so the off/on makespans must match bitwise.
+    pinned = dict(qa_compute_s=0.05, qp_compute_s=0.05, co_compute_s=0.01)
+    ds, preds, rt_off = _tiny_runtime(**pinned)
+    rt_off.search(ds.queries, preds, k=10)        # warm the global DRE pool
+    r_off = rt_off.search(ds.queries, preds, k=10)
+    try:
+        ds2, preds2, rt_on = _tiny_runtime(obs_enabled=True, **pinned)
+        rt_on.search(ds2.queries, preds2, k=10)
+        r_on = rt_on.search(ds2.queries, preds2, k=10)
+
+        # bitwise parity: observability must not perturb results, stats or
+        # the modeled timeline (both are warm waves over the shared pool)
+        np.testing.assert_array_equal(r_off.ids, r_on.ids)
+        assert r_off.stats == r_on.stats
+        assert r_off.trace.makespan_s == r_on.trace.makespan_s
+
+        records = rt_on.obs_exporter.records
+        assert len(records) == 2              # one record per search
+        spans = records[-1]["spans"]
+        kinds = {s["attrs"].get("kind") for s in spans} - {None}
+        assert kinds == {"co", "qa", "qp"}
+        # every parent id resolves inside the same record
+        ids = {s["id"] for s in spans}
+        assert all(s["parent"] in ids for s in spans
+                   if s["parent"] is not None)
+        # local transport synthesizes a compute worker sub-span
+        assert any(s["name"] == "worker.compute" for s in spans)
+        # metrics flowed through the (now enabled) global registry
+        snap = REGISTRY.snapshot()
+        assert snap["counters"].get("transport.local.submits", 0) >= 1
+        assert snap["counters"].get("dre.pool.leases", 0) >= 1
+    finally:
+        REGISTRY.disable()
+        REGISTRY.reset()
+
+
+def test_obs_exporter_none_when_disabled():
+    _, _, rt = _tiny_runtime()
+    assert rt.obs_exporter is None
+
+
+# --------------------------------------------------------------- safe_ratio
+
+
+def test_safe_ratio_guards():
+    from benchmarks.common import safe_ratio
+
+    assert safe_ratio(1.0, 2.0) == 0.5
+    assert safe_ratio(1.0, 0.0) is None
+    assert safe_ratio(1.0, -3.0) is None
+    assert safe_ratio(1.0, None) is None

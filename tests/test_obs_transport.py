@@ -1,0 +1,156 @@
+"""Transport-tier observability tests: real workers, real boundaries.
+
+What only real substrates can pin (auto-marked ``transport`` via
+conftest; CI runs them under a hard timeout):
+
+* Bitwise parity with observability ON over ProcessTransport and
+  SocketTransport — ids and ``SearchStats`` identical to the obs-off run,
+  i.e. the span context riding the ``extra`` envelope and the metric
+  counters never perturb the search.
+* Span stitching across the process / TCP boundary: worker-side
+  fetch / deserialize / compute / serialize sub-spans, recorded inside
+  the worker process against its own clock, come back in the response
+  info and appear as ``worker.*`` children of the node span the client
+  minted at submit time — with no dangling parents.
+* Failure-path metrics: a SIGKILLed process worker increments
+  ``transport.process.respawns`` / ``.retries``; a dropped TCP link
+  increments ``transport.socket.reconnects`` / ``.retries`` — while the
+  search still returns bit-identical results.
+
+Every obs-enabled test disables + resets the global registry in a
+``finally`` (enabling via ``RuntimeConfig(obs_enabled=True)`` is one-way).
+"""
+
+from __future__ import annotations
+
+import os
+import signal
+import threading
+
+import numpy as np
+import pytest
+
+from repro.obs.metrics import REGISTRY
+from repro.serverless.runtime import RuntimeConfig, ServerlessRuntime
+
+WORKER_SPANS = {"worker.fetch", "worker.deserialize", "worker.compute",
+                "worker.serialize"}
+
+
+@pytest.fixture(scope="module")
+def built():
+    from benchmarks.common import build_tiny_squash_index
+
+    ds, preds, idx = build_tiny_squash_index(
+        scale=0.003, num_queries=8, num_partitions=3, seed=7)
+    ids, dists, stats = idx.search(ds.queries, preds, k=10,
+                                   collect_stats=True, backend="jax")
+    return ds, preds, idx, (ids, stats)
+
+
+def _cfg(transport, **overrides):
+    kw = dict(branching=2, max_level=1, transport=transport, qa_workers=1,
+              invoke_timeout_s=120.0)
+    kw.update(overrides)
+    return RuntimeConfig(**kw)
+
+
+def _obs_record(rt):
+    records = rt.obs_exporter.records
+    assert len(records) >= 1
+    return records[-1]
+
+
+def _assert_stitched(record):
+    spans = record["spans"]
+    ids = {s["id"] for s in spans}
+    assert all(s["parent"] in ids for s in spans
+               if s["parent"] is not None), "dangling span parents"
+    kinds = {s["attrs"].get("kind") for s in spans} - {None}
+    assert kinds == {"co", "qa", "qp"}
+    wnames = {s["name"] for s in spans if s["name"].startswith("worker.")}
+    assert WORKER_SPANS <= wnames
+    # worker sub-spans hang off node spans, on the wall clock
+    by_id = {s["id"]: s for s in spans}
+    for s in spans:
+        if s["name"] in WORKER_SPANS:
+            parent = by_id[s["parent"]]
+            assert parent["attrs"].get("kind") in {"qa", "qp"}
+            assert s["attrs"].get("clock") == "wall"
+
+
+@pytest.mark.parametrize("transport", ["process", "socket"])
+def test_real_transport_obs_parity_and_stitching(built, transport):
+    ds, preds, idx, (ref_ids, ref_stats) = built
+
+    rt_off = ServerlessRuntime(idx, _cfg(transport))
+    try:
+        r_off = rt_off.search(ds.queries, preds, k=10)
+    finally:
+        rt_off.close()
+
+    rt_on = ServerlessRuntime(idx, _cfg(transport, obs_enabled=True))
+    try:
+        r_on = rt_on.search(ds.queries, preds, k=10)
+        np.testing.assert_array_equal(r_on.ids, r_off.ids)
+        np.testing.assert_array_equal(r_on.ids, ref_ids)
+        assert r_on.stats == r_off.stats == ref_stats
+
+        _assert_stitched(_obs_record(rt_on))
+        snap = REGISTRY.snapshot()
+        assert snap["counters"].get(f"transport.{transport}.submits", 0) >= 1
+        hist = snap["histograms"].get(f"transport.{transport}.invoke_s")
+        assert hist is not None and hist["count"] >= 1
+        assert hist["p50"] is not None and hist["p99"] >= hist["p50"]
+        if transport == "socket":
+            assert snap["histograms"]["transport.socket.frame_bytes"][
+                "count"] >= 1
+    finally:
+        rt_on.close()
+        REGISTRY.disable()
+        REGISTRY.reset()
+
+
+def test_process_crash_increments_retry_metrics(built):
+    ds, preds, idx, (ref_ids, _) = built
+    rt = ServerlessRuntime(idx, _cfg("process", obs_enabled=True,
+                                     worker_sleep_s=0.6))
+    try:
+        rt.search(ds.queries, preds, k=10)            # warm the fleet
+        pid0 = rt.transport.worker_pids("qp:0")[0]
+        killer = threading.Timer(
+            0.25, lambda: os.kill(pid0, signal.SIGKILL))
+        killer.start()
+        r = rt.search(ds.queries, preds, k=10)
+        killer.join()
+        np.testing.assert_array_equal(r.ids, ref_ids)
+        assert r.trace.worker_retries >= 1
+        snap = REGISTRY.snapshot()["counters"]
+        assert snap.get("transport.process.respawns", 0) >= 1
+        assert snap.get("transport.process.retries", 0) >= 1
+    finally:
+        rt.close()
+        REGISTRY.disable()
+        REGISTRY.reset()
+
+
+def test_socket_drop_increments_reconnect_metrics(built):
+    ds, preds, idx, (ref_ids, _) = built
+    rt = ServerlessRuntime(idx, _cfg("socket", obs_enabled=True,
+                                     worker_sleep_s=0.6))
+    try:
+        rt.search(ds.queries, preds, k=10)            # warm the fleet
+        dropper = threading.Timer(
+            0.25, lambda: rt.transport.drop_connection("qp:0"))
+        dropper.start()
+        r = rt.search(ds.queries, preds, k=10)
+        dropper.join()
+        np.testing.assert_array_equal(r.ids, ref_ids)
+        assert r.trace.worker_retries >= 1
+        snap = REGISTRY.snapshot()["counters"]
+        assert snap.get("transport.socket.reconnects", 0) >= 1
+        assert snap.get("transport.socket.retries", 0) >= 1
+    finally:
+        rt.close()
+        REGISTRY.disable()
+        REGISTRY.reset()
