@@ -1,0 +1,23 @@
+"""squashlint: AST-based invariant checkers for the SQUASH repro.
+
+Four checker families over ``src/repro`` (see DESIGN.md §"Static
+invariants" for the conventions they enforce):
+
+* :mod:`repro.analysis.locks` — ``# guarded-by:`` field discipline and the
+  cross-file lock-acquisition-order graph;
+* :mod:`repro.analysis.determinism` — wall-clock / unseeded-RNG /
+  set-iteration bans inside the bitwise-parity modules;
+* :mod:`repro.analysis.wire` — pickle and raw socket I/O confined to the
+  ``serverless/payload.py`` codec;
+* :mod:`repro.analysis.jit` — concretization, mutable-global closure and
+  trace-cache hygiene in the jitted data plane.
+
+Run with ``python -m repro.analysis`` (``--strict`` in CI). Suppress a
+finding inline with ``# squash: ignore[rule-id] -- justification`` or
+grandfather it in ``baseline.json`` (the ratchet only shrinks).
+"""
+
+from repro.analysis.findings import Finding, RULES
+from repro.analysis.runner import analyze_source, analyze_tree, main
+
+__all__ = ["Finding", "RULES", "analyze_source", "analyze_tree", "main"]

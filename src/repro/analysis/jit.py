@@ -1,0 +1,238 @@
+"""jit / recompile hygiene checker for the compiled data plane.
+
+Applied to the jitted modules (``core/dataplane.py``, ``core/distributed.py``,
+``kernels/``). Four rules:
+
+* ``jit-concretize`` — ``.item()``, ``float(...)`` or ``bool(...)`` on a
+  traced value inside a jitted body forces a device sync and breaks under
+  abstract tracing. Shape arithmetic is exempt: ``int(x.shape[0])``,
+  ``float(len(xs))`` and friends are static at trace time.
+* ``jit-mutable-global`` — a jitted body reading a module-level mutable
+  numpy array closes over host state the trace bakes in: mutating the
+  global later silently diverges from the compiled computation. (Immutable
+  ``jnp`` constants are fine — jax arrays cannot be mutated in place.)
+* ``jit-static-argnames`` — a ``jax.jit`` application whose target has
+  scalar-default parameters (int/bool/str — shape knobs and dispatch flags)
+  not named in ``static_argnames``/``static_argnums``: passing them traced
+  either fails (shape-determining) or retraces per distinct value without
+  the cache keying the caller expects.
+* ``jit-per-call`` — an immediately-invoked ``jax.jit(f)(args...)`` builds
+  a *fresh* jit wrapper per call, so jax's trace cache (keyed on wrapper
+  identity) never hits and every call retraces + recompiles. Hoist the
+  ``jax.jit`` or cache the wrapped callable.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.findings import Finding
+from repro.analysis.source import SourceFile
+
+__all__ = ["check_jit"]
+
+_NP_NAMES = {"np", "numpy"}
+_NP_MUTABLE_CTORS = {"array", "zeros", "ones", "empty", "full", "arange",
+                     "zeros_like", "ones_like", "empty_like", "full_like",
+                     "linspace", "eye", "tile"}
+_SHAPE_ATTRS = {"shape", "ndim", "size"}
+_STATIC_DEFAULT_TYPES = (int, bool, str)
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    """``jax.jit`` or a bare ``jit`` name."""
+    if isinstance(node, ast.Attribute) and node.attr == "jit":
+        return isinstance(node.value, ast.Name) and node.value.id == "jax"
+    return isinstance(node, ast.Name) and node.id == "jit"
+
+
+def _is_partial(node: ast.AST) -> bool:
+    if isinstance(node, ast.Attribute) and node.attr == "partial":
+        return True
+    return isinstance(node, ast.Name) and node.id == "partial"
+
+
+def _static_names(call: ast.Call) -> Optional[Set[str]]:
+    """Names listed in ``static_argnames=`` (None when not present)."""
+    for kw in call.keywords:
+        if kw.arg != "static_argnames":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, str):
+            return {v.value}
+        if isinstance(v, (ast.Tuple, ast.List)):
+            return {e.value for e in v.elts
+                    if isinstance(e, ast.Constant) and isinstance(e.value, str)}
+        return set()
+    return None
+
+
+def _static_nums(call: ast.Call) -> Optional[List[int]]:
+    for kw in call.keywords:
+        if kw.arg != "static_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return [v.value]
+        if isinstance(v, (ast.Tuple, ast.List)):
+            return [e.value for e in v.elts
+                    if isinstance(e, ast.Constant) and isinstance(e.value, int)]
+        return []
+    return None
+
+
+def _jit_application(node: ast.AST) -> Optional[ast.Call]:
+    """The jit-configuring Call if ``node`` applies jax.jit, else None.
+
+    Recognizes ``jax.jit``, ``jax.jit(...)`` (bare attribute has no config
+    call — a synthetic empty one is returned) and
+    ``functools.partial(jax.jit, ...)``.
+    """
+    if _is_jax_jit(node):
+        return ast.Call(func=node, args=[], keywords=[])
+    if isinstance(node, ast.Call):
+        if _is_jax_jit(node.func):
+            return node
+        if _is_partial(node.func) and node.args and _is_jax_jit(node.args[0]):
+            return node
+    return None
+
+
+def _contains_shape_access(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr in _SHAPE_ATTRS:
+            return True
+        if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name) \
+                and sub.func.id == "len":
+            return True
+    return False
+
+
+class _JitBodyVisitor(ast.NodeVisitor):
+    """Concretization + mutable-global checks inside one jitted body."""
+
+    def __init__(self, src: SourceFile, mutable_globals: Set[str],
+                 findings: List[Finding]):
+        self.src = src
+        self.mutable_globals = mutable_globals
+        self.findings = findings
+
+    def visit_Call(self, node: ast.Call) -> None:
+        func = node.func
+        if isinstance(func, ast.Attribute) and func.attr == "item":
+            self.findings.append(Finding(
+                self.src.rel, node.lineno, "jit-concretize",
+                "`.item()` inside a jitted body forces a device sync / "
+                "fails under tracing"))
+        elif isinstance(func, ast.Name) and func.id in ("float", "bool") \
+                and node.args:
+            arg = node.args[0]
+            if not (isinstance(arg, ast.Constant)
+                    or _contains_shape_access(arg)):
+                self.findings.append(Finding(
+                    self.src.rel, node.lineno, "jit-concretize",
+                    f"`{func.id}()` on a (potentially traced) value inside "
+                    "a jitted body; only shape arithmetic is static"))
+        self.generic_visit(node)
+
+    def visit_Name(self, node: ast.Name) -> None:
+        if isinstance(node.ctx, ast.Load) and node.id in self.mutable_globals:
+            self.findings.append(Finding(
+                self.src.rel, node.lineno, "jit-mutable-global",
+                f"jitted body reads mutable numpy global `{node.id}`; the "
+                "trace bakes in its current contents"))
+
+
+def _module_mutable_np_globals(tree: ast.Module) -> Set[str]:
+    out: Set[str] = set()
+    for stmt in tree.body:
+        if not isinstance(stmt, ast.Assign):
+            continue
+        v = stmt.value
+        if isinstance(v, ast.Call) and isinstance(v.func, ast.Attribute) \
+                and isinstance(v.func.value, ast.Name) \
+                and v.func.value.id in _NP_NAMES \
+                and v.func.attr in _NP_MUTABLE_CTORS:
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+    return out
+
+
+def _check_signature(src: SourceFile, fn: ast.FunctionDef, config: ast.Call,
+                     findings: List[Finding]) -> None:
+    names = _static_names(config) or set()
+    nums = _static_nums(config) or []
+    args = fn.args
+    all_params = args.posonlyargs + args.args + args.kwonlyargs
+    for i in nums:
+        if 0 <= i < len(args.posonlyargs + args.args):
+            names.add((args.posonlyargs + args.args)[i].arg)
+    # Pair params with their defaults (positional defaults right-align).
+    defaults: Dict[str, ast.AST] = {}
+    pos = args.posonlyargs + args.args
+    for param, d in zip(pos[len(pos) - len(args.defaults):], args.defaults):
+        defaults[param.arg] = d
+    for param, d in zip(args.kwonlyargs, args.kw_defaults):
+        if d is not None:
+            defaults[param.arg] = d
+    for pname, d in defaults.items():
+        if pname in names:
+            continue
+        if isinstance(d, ast.Constant) \
+                and isinstance(d.value, _STATIC_DEFAULT_TYPES) \
+                and not isinstance(d.value, float) and d.value is not None:
+            findings.append(Finding(
+                src.rel, fn.lineno, "jit-static-argnames",
+                f"jitted `{fn.name}` has scalar-default param `{pname}` "
+                f"not in static_argnames — traced flags/shape knobs "
+                "retrace unpredictably or fail"))
+
+
+def check_jit(src: SourceFile) -> List[Finding]:
+    if src.tree is None:
+        return []
+    findings: List[Finding] = []
+    mutable_globals = _module_mutable_np_globals(src.tree)
+
+    # Functions by name, so `jax.jit(fn)` marks `fn`'s def as jitted.
+    defs: Dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.FunctionDef):
+            defs[node.name] = node
+
+    jitted: Dict[int, ast.FunctionDef] = {}   # id(node) → def
+    configs: List = []                        # (def, config Call)
+
+    for node in ast.walk(src.tree):
+        # Decorated defs: @jax.jit / @partial(jax.jit, ...)
+        if isinstance(node, ast.FunctionDef):
+            for dec in node.decorator_list:
+                config = _jit_application(dec)
+                if config is not None:
+                    jitted[id(node)] = node
+                    configs.append((node, config))
+        # Call-wrapped: jax.jit(fn) — mark fn; immediately-invoked form.
+        elif isinstance(node, ast.Call):
+            # `jax.jit(...)(args)` → fresh wrapper per call.
+            if isinstance(node.func, ast.Call) and _is_jax_jit(node.func.func):
+                findings.append(Finding(
+                    src.rel, node.lineno, "jit-per-call",
+                    "immediately-invoked `jax.jit(...)(...)` builds a "
+                    "fresh wrapper per call — the trace cache never "
+                    "hits; hoist or cache the jitted callable"))
+            if _is_jax_jit(node.func):
+                for arg in node.args[:1]:
+                    if isinstance(arg, ast.Name) and arg.id in defs:
+                        target = defs[arg.id]
+                        jitted[id(target)] = target
+                        configs.append((target, node))
+
+    for fn, config in configs:
+        _check_signature(src, fn, config, findings)
+    for fn in jitted.values():
+        body = _JitBodyVisitor(src, mutable_globals, findings)
+        for stmt in fn.body:
+            body.visit(stmt)
+    return findings

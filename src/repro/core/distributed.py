@@ -77,30 +77,43 @@ def make_search_fn(
     dq = data_axes if len(data_axes) > 1 else data_axes[0]
     query_spec = P(dq)                       # (Q, d): Q over data axes
     mask_spec = P(dq, model_axis)            # (Q, P, n_max) / (Q, P)
-    treedef_box = {}
 
-    def _shard_body(queries, cand_mask, keep, take, *stacked_leaves):
-        stacked = jax.tree_util.tree_unflatten(treedef_box["td"], stacked_leaves)
-        # Local batched Stage 3–5 over this shard's partition stack.
-        ids, dists = dataplane.batched_stage345(
-            queries, stacked, cand_mask, keep, take,
-            k=k, keep_s=keep_s, take_s=take_s, refine=refine,
-        )                                                       # (Qs, k)
-        # Single-pass MPI-style reduce over the model axis (§2.4.5).
-        all_ids = jax.lax.all_gather(ids, model_axis, axis=1, tiled=True)
-        all_d = jax.lax.all_gather(dists, model_axis, axis=1, tiled=True)
-        neg, sel = jax.lax.top_k(-all_d, k)
-        return jnp.take_along_axis(all_ids, sel, axis=1), -neg
+    # jax's trace cache is keyed on the *wrapper's identity*, so the old
+    # `return jax.jit(fn)(...)` built a fresh wrapper per search and
+    # recompiled the shard_map kernel on every call. Cache one jitted
+    # wrapper per stacked-index treedef instead (the treedef is the only
+    # call-to-call structural variation; shape changes within a treedef hit
+    # jax's own signature cache inside the retained wrapper).
+    jit_cache = {}
 
-    def search(queries, cand_mask, keep, take, stacked: StackedIndex):
-        leaves, treedef_box["td"] = jax.tree_util.tree_flatten(stacked)
+    def _build(treedef):
+        def _shard_body(queries, cand_mask, keep, take, *stacked_leaves):
+            stacked = jax.tree_util.tree_unflatten(treedef, stacked_leaves)
+            # Local batched Stage 3–5 over this shard's partition stack.
+            ids, dists = dataplane.batched_stage345(
+                queries, stacked, cand_mask, keep, take,
+                k=k, keep_s=keep_s, take_s=take_s, refine=refine,
+            )                                                   # (Qs, k)
+            # Single-pass MPI-style reduce over the model axis (§2.4.5).
+            all_ids = jax.lax.all_gather(ids, model_axis, axis=1, tiled=True)
+            all_d = jax.lax.all_gather(dists, model_axis, axis=1, tiled=True)
+            neg, sel = jax.lax.top_k(-all_d, k)
+            return jnp.take_along_axis(all_ids, sel, axis=1), -neg
+
         in_specs = (query_spec, mask_spec, mask_spec, mask_spec,
-                    *(P(model_axis) for _ in leaves))
+                    *(P(model_axis) for _ in range(treedef.num_leaves)))
         out_specs = (query_spec, query_spec)
         fn = _shard_map(
             _shard_body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         )
-        return jax.jit(fn)(queries, cand_mask, keep, take, *leaves)
+        return jax.jit(fn)
+
+    def search(queries, cand_mask, keep, take, stacked: StackedIndex):
+        leaves, treedef = jax.tree_util.tree_flatten(stacked)
+        fn = jit_cache.get(treedef)
+        if fn is None:
+            fn = jit_cache[treedef] = _build(treedef)
+        return fn(queries, cand_mask, keep, take, *leaves)
 
     return search
 

@@ -24,11 +24,15 @@ def ambient_mesh_sizes() -> dict:
     JAX 0.8, so we fall back to the (deprecated but functional)
     thread-resources mesh.
     """
+    # Narrowed to the shapes jax version drift actually produces: a missing
+    # accessor (AttributeError), a signature change (TypeError), or a mesh
+    # object refusing the query (ValueError/RuntimeError). Anything else —
+    # a genuine bug — propagates instead of being silently eaten.
     try:
         am = jax.sharding.get_abstract_mesh()
         if getattr(am, "axis_names", ()):
             return dict(zip(am.axis_names, am.axis_sizes))
-    except Exception:
+    except (AttributeError, TypeError, ValueError, RuntimeError):
         pass
     try:
         with warnings.catch_warnings():
@@ -36,7 +40,7 @@ def ambient_mesh_sizes() -> dict:
             pm = jax.interpreters.pxla.thread_resources.env.physical_mesh
         if pm is not None and pm.axis_names:
             return dict(pm.shape)
-    except Exception:
+    except (AttributeError, TypeError, ValueError, RuntimeError):
         pass
     return {}
 
@@ -57,5 +61,7 @@ def hint(x, *spec):
         return x
     try:
         return jax.lax.with_sharding_constraint(x, P(*spec))
-    except Exception:
+    except (ValueError, TypeError, KeyError, RuntimeError):
+        # The no-mesh / unknown-axis rejection varies by jax version;
+        # anything outside these (e.g. a tracer leak) should propagate.
         return x

@@ -86,7 +86,7 @@ class Counter:
     def __init__(self, name: str):
         self.name = name
         self._lock = threading.Lock()
-        self._value = 0
+        self._value = 0  # guarded-by: _lock
 
     def inc(self, n: int = 1) -> None:
         with self._lock:
@@ -94,25 +94,35 @@ class Counter:
 
     @property
     def value(self) -> int:
-        return self._value
+        with self._lock:
+            return self._value
 
 
 class Gauge:
-    """Last-write-wins instantaneous value."""
+    """Last-write-wins instantaneous value.
+
+    ``inc`` is a read-modify-write, so it takes a lock like Counter does —
+    the original lock-free version lost updates whenever two transport
+    threads bumped the same gauge concurrently.
+    """
 
     def __init__(self, name: str):
         self.name = name
-        self._value = 0.0
+        self._lock = threading.Lock()
+        self._value = 0.0  # guarded-by: _lock
 
     def set(self, value: float) -> None:
-        self._value = float(value)
+        with self._lock:
+            self._value = float(value)
 
     def inc(self, n: float = 1) -> None:
-        self._value += n
+        with self._lock:
+            self._value += n
 
     @property
     def value(self) -> float:
-        return self._value
+        with self._lock:
+            return self._value
 
 
 class Histogram:
@@ -131,10 +141,10 @@ class Histogram:
             raise ValueError("histogram buckets must be increasing bounds")
         self.name = name
         self.bounds: Tuple[float, ...] = tuple(float(b) for b in buckets)
-        self._counts = [0] * (len(self.bounds) + 1)    # last = +inf overflow
+        self._counts = [0] * (len(self.bounds) + 1)  # guarded-by: _lock
         self._lock = threading.Lock()
-        self._sum = 0.0
-        self._count = 0
+        self._sum = 0.0    # guarded-by: _lock
+        self._count = 0    # guarded-by: _lock
 
     def observe(self, value: float) -> None:
         value = float(value)
@@ -150,15 +160,22 @@ class Histogram:
 
     @property
     def count(self) -> int:
-        return self._count
+        with self._lock:
+            return self._count
 
     @property
     def sum(self) -> float:
-        return self._sum
+        with self._lock:
+            return self._sum
 
     def bucket_counts(self) -> Dict[str, int]:
-        out = {repr(b): c for b, c in zip(self.bounds, self._counts)}
-        out["+inf"] = self._counts[-1]
+        # Snapshot under the lock: reading _counts while observe() mutates
+        # it could pair a bucket tally with a +inf tally from a different
+        # instant, so the dump's buckets wouldn't sum to its count.
+        with self._lock:
+            counts = list(self._counts)
+        out = {repr(b): c for b, c in zip(self.bounds, counts)}
+        out["+inf"] = counts[-1]
         return out
 
     def quantile(self, q: float) -> Optional[float]:
@@ -187,9 +204,9 @@ class MetricsRegistry:
     def __init__(self, enabled: bool = False):
         self._enabled = enabled
         self._lock = threading.Lock()
-        self._counters: Dict[str, Counter] = {}
-        self._gauges: Dict[str, Gauge] = {}
-        self._histograms: Dict[str, Histogram] = {}
+        self._counters: Dict[str, Counter] = {}      # guarded-by: _lock
+        self._gauges: Dict[str, Gauge] = {}          # guarded-by: _lock
+        self._histograms: Dict[str, Histogram] = {}  # guarded-by: _lock
 
     # ------------------------------------------------------------- switches
 
@@ -215,7 +232,7 @@ class MetricsRegistry:
     def counter(self, name: str) -> Counter:
         if not self._enabled:
             return _NULL
-        c = self._counters.get(name)
+        c = self._counters.get(name)  # squash: ignore[lock-guarded-access] -- lock-free hot-path read: dict.get is atomic under the GIL; a miss falls through to the locked setdefault
         if c is None:
             with self._lock:
                 c = self._counters.setdefault(name, Counter(name))
@@ -224,7 +241,7 @@ class MetricsRegistry:
     def gauge(self, name: str) -> Gauge:
         if not self._enabled:
             return _NULL
-        g = self._gauges.get(name)
+        g = self._gauges.get(name)  # squash: ignore[lock-guarded-access] -- lock-free hot-path read: dict.get is atomic under the GIL; a miss falls through to the locked setdefault
         if g is None:
             with self._lock:
                 g = self._gauges.setdefault(name, Gauge(name))
@@ -235,7 +252,7 @@ class MetricsRegistry:
         """Get-or-create; ``buckets`` only applies on first creation."""
         if not self._enabled:
             return _NULL
-        h = self._histograms.get(name)
+        h = self._histograms.get(name)  # squash: ignore[lock-guarded-access] -- lock-free hot-path read: dict.get is atomic under the GIL; a miss falls through to the locked setdefault
         if h is None:
             with self._lock:
                 h = self._histograms.setdefault(

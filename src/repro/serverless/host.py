@@ -31,7 +31,6 @@ process — can scrape the port and pass ``host:port`` to the client.
 from __future__ import annotations
 
 import argparse
-import pickle
 import queue
 import socket
 import threading
@@ -39,6 +38,7 @@ from typing import Callable, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.metrics import REGISTRY as _METRICS
 from repro.serverless import payload as pl
 from repro.serverless import workers as wk
 
@@ -69,7 +69,11 @@ def _compute_loop(conn, send_lock: threading.Lock, jobs: "queue.Queue",
                     pl.write_frame(conn, pl.FRAME_RESP, body,
                                    max_bytes=max_bytes + pl.FRAME_SLACK)
         except (OSError, ConnectionError):
-            return                            # client went away; worker dies
+            # Client went away; this worker dies with the connection (the
+            # transport's reconnect path deploys a fresh one). Counted so a
+            # fleet silently shedding workers shows up in the metrics dump.
+            _METRICS.counter("transport.host.swallowed_errors").inc()
+            return
 
 
 def _serve_connection(conn: socket.socket) -> None:
@@ -87,7 +91,7 @@ def _serve_connection(conn: socket.socket) -> None:
             except (ConnectionError, OSError):
                 break
             if kind == pl.FRAME_INIT:
-                init, max_bytes = pickle.loads(body)
+                init, max_bytes = pl.decode_init(body)
                 wk.configure_jax(init)
                 server = wk.RequestServer(init)
                 threading.Thread(

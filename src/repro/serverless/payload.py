@@ -28,6 +28,7 @@ synchronous invocation payload) and are budget-exempt.
 from __future__ import annotations
 
 import json
+import pickle
 import struct
 from typing import Callable, Dict, List, Sequence, Tuple
 
@@ -42,6 +43,7 @@ __all__ = [
     "OBS_EXTRA_KEY", "inject_span_context", "extract_span_context",
     "FRAME_INIT", "FRAME_REQ", "FRAME_RESP", "FRAME_PING", "FRAME_PONG",
     "FRAME_SHUTDOWN", "write_frame", "read_frame",
+    "encode_init", "decode_init",
 ]
 
 # AWS Lambda request/response limit for synchronous invocations (6 MB).
@@ -246,6 +248,29 @@ def read_frame(sock) -> Tuple[bytes, bytes]:
     """Receive one frame → ``(kind, body)``; raises ConnectionError on EOF."""
     kind, length = _FRAME_HEADER.unpack(_recv_exact(sock, _FRAME_HEADER.size))
     return kind, _recv_exact(sock, length)
+
+
+def encode_init(init, max_bytes: int) -> bytes:
+    """Serialize a FRAME_INIT body: ``(WorkerInit bundle, payload budget)``.
+
+    The deployment bundle carries arbitrary callables and index state, so it
+    is the one wire body that legitimately needs pickle — confining the
+    ``pickle.dumps`` here keeps every other module codec-only (the
+    wire-discipline invariant squashlint enforces). INIT frames are exempt
+    from the 6 MB budget: deployment is the control plane, not a Lambda
+    invocation.
+    """
+    return pickle.dumps((init, max_bytes), protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def decode_init(body: bytes):
+    """Inverse of :func:`encode_init` → ``(init, max_bytes)``.
+
+    Only ever called by the worker host on its deployment socket — the
+    connecting side is trusted (same user, loopback fleet); invocation
+    request/response bodies never go through pickle.
+    """
+    return pickle.loads(body)
 
 
 def predicates_to_json(predicates: Sequence[Predicate]) -> List[Dict]:

@@ -36,7 +36,6 @@ from __future__ import annotations
 
 import itertools
 import multiprocessing as mp
-import pickle
 import socket
 import threading
 import time
@@ -89,7 +88,7 @@ class _LocalHostHandle:
                     "spawned host died before reporting its port")
             if time.monotonic() > deadline:
                 raise ConnectionError("spawned host never reported its port")
-        port = parent.recv()
+        port = parent.recv()  # squash: ignore[wire-raw-socket] -- mp pipe Connection.recv (the spawned host's port report), not a TCP socket; no payload bytes travel here
         parent.close()
         self.address = ("127.0.0.1", port)
         return self.address
@@ -124,17 +123,17 @@ class _Link:
         self.address = address
         self.owner = owner
         self.sock: Optional[socket.socket] = None
-        self.generation = 0
-        self.assigned = 0            # requests routed here (sent or queued)
-        self.done = 0                # responses received
-        self.dead = False
+        self.generation = 0          # guarded-by: _lock
+        self.assigned = 0            # guarded-by: _lock -- routed (sent or queued)
+        self.done = 0                # guarded-by: _lock -- responses received
+        self.dead = False            # guarded-by: _lock
         self.send_lock = threading.Lock()
         self.up = threading.Event()  # connection established + deploy-acked
         self.last_seen = time.perf_counter()   # last frame received
-        self.pages: Dict[int, List[Optional[bytes]]] = {}  # rid → RESP pages
+        self.pages: Dict[int, List[Optional[bytes]]] = {}  # guarded-by: _lock
 
     @property
-    def inflight(self) -> int:
+    def inflight(self) -> int:  # squash: holds[_lock]
         return self.assigned - self.done
 
     @property
@@ -147,7 +146,7 @@ class _SocketInvocation(tr._ProcessInvocation):
 
     def result(self):
         resp, info = super().result()
-        link = self._pending.worker
+        link = self._pending.worker  # squash: ignore[lock-guarded-access] -- name collision: this _pending is the invocation's own _Pending object (bound once at construction), not the transport's guarded dict; worker is read post-resolution
         if link is not None:
             info.host = link.host
         return resp, info
@@ -183,9 +182,9 @@ class SocketTransport(tr.Transport):
         self.connect_timeout_s = connect_timeout_s
         self._rid = itertools.count()
         self._lock = threading.Lock()
-        self._pending: Dict[int, tr._Pending] = {}
-        self._timed_out: Dict[int, _Link] = {}
-        self._closed = False
+        self._pending: Dict[int, tr._Pending] = {}  # guarded-by: _lock
+        self._timed_out: Dict[int, _Link] = {}      # guarded-by: _lock
+        self._closed = False                        # guarded-by: _lock
         self._owned_hosts: List[_LocalHostHandle] = []
         if hosts:
             addresses = [_parse_host(h) for h in hosts]
@@ -239,7 +238,7 @@ class SocketTransport(tr.Transport):
         try:
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             pl.write_frame(sock, pl.FRAME_INIT,
-                           pickle.dumps((link.init, self.max_payload_bytes)))
+                           pl.encode_init(link.init, self.max_payload_bytes))
             kind, _ = pl.read_frame(sock)        # honors the connect timeout
             if kind != pl.FRAME_PONG:
                 raise ConnectionError(
@@ -285,7 +284,7 @@ class SocketTransport(tr.Transport):
             self._send(pending)
         return _SocketInvocation(self, pending, predicted_warm)
 
-    def _pick(self, fn: str) -> _Link:
+    def _pick(self, fn: str) -> _Link:  # squash: holds[_lock]
         if fn not in self._links:
             raise tr.TransportError(f"no worker links for function {fn!r}")
         pool = [link for link in self._links[fn] if not link.dead]
@@ -298,8 +297,8 @@ class SocketTransport(tr.Transport):
         """Deliver a pending request, waiting out reconnects of its link."""
         while not pending.resolved and not pending.sent:
             link = pending.worker
-            if link.dead:
-                return               # failure path already failed/parked it
+            if link.dead:  # squash: ignore[lock-guarded-access] -- lock-free fast-path read; the locked failure path already failed/parked this pending, so a stale False only costs one extra loop
+                return
             if not link.up.wait(0.1):
                 continue             # reconnect in progress
             sock = link.sock
@@ -317,10 +316,18 @@ class SocketTransport(tr.Transport):
                 _METRICS.histogram(
                     "transport.socket.frame_bytes",
                     buckets=DEFAULT_BYTES_BUCKETS).observe(len(body))
-                pending.sent = True
-                pending.t_sent = time.perf_counter()
+                # Mark sent under the transport lock, re-checking that the
+                # connection we wrote to is still current: if the link
+                # failed between write_frame and here, the failure handler
+                # has already decided this pending's fate (resend with
+                # sent=False) and marking it sent now would strand it —
+                # the reconnect path only re-sends what it saw as sent.
+                with self._lock:
+                    if link.sock is sock and not link.dead:
+                        pending.sent = True
+                        pending.t_sent = time.perf_counter()
             except (OSError, ConnectionError):
-                self._on_link_failure(link, link.generation)
+                self._on_link_failure(link, link.generation)  # squash: ignore[lock-guarded-access] -- generation snapshot read: a stale value makes _on_link_failure a no-op by design (another thread already handled this loss)
 
     # ------------------------------------------------------------ collection
 
@@ -343,16 +350,20 @@ class SocketTransport(tr.Transport):
         rid = int(msg["rid"])
         nseq = int(msg["nseq"])
         data = msg["data"].tobytes()
-        if nseq > 1:                          # paginated response: reassemble
-            pages = link.pages.setdefault(rid, [None] * nseq)
-            pages[int(msg["seq"])] = data
-            if any(p is None for p in pages):
-                return
-            del link.pages[rid]
-            data = b"".join(pages)
         ok = bool(msg["ok"])
         winfo = msg["info"]
         with self._lock:
+            if nseq > 1:                      # paginated response: reassemble
+                # Under _lock: _on_link_failure clears link.pages (also
+                # under _lock) when the connection drops, and unlocked
+                # reassembly raced it — a clear between setdefault and the
+                # final del left a KeyError that killed the read thread.
+                pages = link.pages.setdefault(rid, [None] * nseq)
+                pages[int(msg["seq"])] = data
+                if any(p is None for p in pages):
+                    return
+                link.pages.pop(rid, None)
+                data = b"".join(pages)
             pending = self._pending.pop(rid, None)
             if pending is not None:
                 link.done += 1
@@ -374,17 +385,18 @@ class SocketTransport(tr.Transport):
 
     def _monitor_loop(self) -> None:
         """Heartbeat every link; silence + in-flight work ⇒ link is dead."""
-        while not self._closed:
+        while not self._closed:  # squash: ignore[lock-guarded-access] -- lock-free shutdown poll; a stale read costs one extra heartbeat tick, never correctness
             time.sleep(self.heartbeat_s / 2.0)
             with self._lock:
                 links = [link for links in self._links.values()
                          for link in links
                          if not link.dead and link.up.is_set()]
+                inflight = {id(link): link.inflight for link in links}
             now = time.perf_counter()
             for link in links:
-                if (link.inflight > 0 and now - link.last_seen
+                if (inflight[id(link)] > 0 and now - link.last_seen
                         > self.heartbeat_s * self.heartbeat_misses):
-                    self._on_link_failure(link, link.generation)
+                    self._on_link_failure(link, link.generation)  # squash: ignore[lock-guarded-access] -- generation snapshot read: a stale value makes _on_link_failure a no-op by design
                     continue
                 sock = link.sock
                 if sock is None:
@@ -394,7 +406,7 @@ class SocketTransport(tr.Transport):
                         pl.write_frame(sock, pl.FRAME_PING)
                     _METRICS.counter("transport.socket.heartbeats").inc()
                 except (OSError, ConnectionError):
-                    self._on_link_failure(link, link.generation)
+                    self._on_link_failure(link, link.generation)  # squash: ignore[lock-guarded-access] -- generation snapshot read: a stale value makes _on_link_failure a no-op by design
 
     def _on_link_failure(self, link: _Link, gen: int) -> None:
         """Reconnect a lost link and re-send its in-flight invocations.
@@ -436,11 +448,11 @@ class SocketTransport(tr.Transport):
             try:
                 old.close()
             except OSError:
-                pass
+                _METRICS.counter("transport.socket.swallowed_errors").inc()
         delay = 0.05
         deadline = time.perf_counter() + self.connect_timeout_s
         while True:
-            if self._closed:
+            if self._closed:  # squash: ignore[lock-guarded-access] -- lock-free shutdown poll during reconnect backoff; close() fails the stragglers itself
                 return
             try:
                 if link.owner is not None:
@@ -464,7 +476,7 @@ class SocketTransport(tr.Transport):
                 self._send(p)
 
     def _fail_locked(self, pendings: List[tr._Pending],
-                     exc: Exception) -> None:
+                     exc: Exception) -> None:  # squash: holds[_lock]
         """Fail + forget pendings, rebalancing their link (lock held).
 
         Links outlive failures (unlike workers), so a failed invocation must
@@ -495,13 +507,16 @@ class SocketTransport(tr.Transport):
             try:
                 sock.shutdown(socket.SHUT_RDWR)
             except OSError:
-                pass
+                _METRICS.counter("transport.socket.swallowed_errors").inc()
 
     def close(self) -> None:
-        if self._closed:
-            return
-        self._closed = True
+        # Check-and-set under the lock: two racing close() calls (user +
+        # __del__, or two fixtures) both used to pass the unlocked
+        # `if self._closed` test and double-send SHUTDOWN frames.
         with self._lock:
+            if self._closed:
+                return
+            self._closed = True
             links = [link for ls in self._links.values() for link in ls]
             for p in self._pending.values():
                 if not p.resolved:
@@ -516,11 +531,11 @@ class SocketTransport(tr.Transport):
                 with link.send_lock:
                     pl.write_frame(sock, pl.FRAME_SHUTDOWN)
             except (OSError, ConnectionError):
-                pass
+                _METRICS.counter("transport.socket.swallowed_errors").inc()
             try:
                 sock.close()
             except OSError:
-                pass
+                _METRICS.counter("transport.socket.swallowed_errors").inc()
         for h in self._owned_hosts:
             h.terminate()
         monitor = getattr(self, "_monitor", None)  # deploy may fail earlier

@@ -180,13 +180,13 @@ class _Worker:
         self.resp_conn = resp_r      # worker → parent responses
         self.init = init
         self.fn = init.fn
-        self.assigned = 0            # requests routed here (sent or queued)
-        self.done = 0                # responses received
-        self.dead = False
+        self.assigned = 0            # guarded-by: _lock -- routed (sent or queued)
+        self.done = 0                # guarded-by: _lock -- responses received
+        self.dead = False            # guarded-by: _lock
         self.send_lock = threading.Lock()
 
     @property
-    def inflight(self) -> int:
+    def inflight(self) -> int:  # squash: holds[_lock]
         return self.assigned - self.done
 
 
@@ -196,9 +196,9 @@ class _Pending:
         self.fn = fn
         self.payload = payload
         self.extra = extra
-        self.worker: Optional[_Worker] = None
+        self.worker: Optional[_Worker] = None  # guarded-by: _lock
         self.retries = 0
-        self.sent = False
+        self.sent = False                      # guarded-by: _lock
         self.event = threading.Event()
         self.value = None
         self.error: Optional[Exception] = None
@@ -232,8 +232,8 @@ class _ProcessInvocation:
 
     def result(self):
         t = self._transport
-        p = self._pending
-        if not p.sent and not p.resolved:
+        p = self._pending  # squash: ignore[lock-guarded-access] -- name collision: the invocation's own _Pending object (bound once at construction), not the transport's guarded dict
+        if not p.sent and not p.resolved:  # squash: ignore[lock-guarded-access] -- lock-free fast path: a stale False only makes _send re-check (it exits on sent/resolved); a stale True means the send already happened
             t._send(p)                       # lazy (sequential) mode
         if not p.event.wait(t.invoke_timeout_s):
             timed_out = False
@@ -298,13 +298,14 @@ class ProcessTransport(Transport):
         self.max_retries = max_retries
         self._rid = itertools.count()
         self._lock = threading.Lock()
-        self._pending: Dict[int, _Pending] = {}
-        self._timed_out: Dict[int, _Worker] = {}  # dropped on timeout; a late
-                                                  # response must not re-book
-        self._dead_births: Dict[str, int] = {}   # consecutive dead spawns
-        self._respawning: Dict[str, int] = {}    # replacements being spawned
-        self._closed = False
-        self._workers: Dict[str, List[_Worker]] = {
+        self._pending: Dict[int, _Pending] = {}   # guarded-by: _lock
+        self._timed_out: Dict[int, _Worker] = {}  # guarded-by: _lock -- dropped
+                                                  # on timeout; a late response
+                                                  # must not re-book
+        self._dead_births: Dict[str, int] = {}   # guarded-by: _lock
+        self._respawning: Dict[str, int] = {}    # guarded-by: _lock
+        self._closed = False                     # guarded-by: _lock
+        self._workers: Dict[str, List[_Worker]] = {  # guarded-by: _lock
             fn: [_Worker(self._ctx, init) for _ in range(count)]
             for fn, (init, count) in inits.items()
         }
@@ -348,7 +349,7 @@ class ProcessTransport(Transport):
             self._send(pending)
         return _ProcessInvocation(self, pending, predicted_warm)
 
-    def _pick(self, fn: str) -> Optional[_Worker]:
+    def _pick(self, fn: str) -> Optional[_Worker]:  # squash: holds[_lock]
         """Least-loaded live worker; None while a respawn is in flight."""
         if fn not in self._workers:
             raise TransportError(f"no worker pool for function {fn!r}")
@@ -370,21 +371,30 @@ class ProcessTransport(Transport):
         terminates because every failure either resolves the pending or
         installs a live worker to send to.
         """
-        while not pending.resolved and not pending.sent:
-            worker = pending.worker
+        while not pending.resolved and not pending.sent:  # squash: ignore[lock-guarded-access] -- lock-free loop condition; the locked re-check below is what commits the sent flag
+            worker = pending.worker  # squash: ignore[lock-guarded-access] -- routing snapshot; if the failure path re-routes concurrently, the locked re-check below refuses to mark sent and the loop retries on the replacement
             try:
                 with worker.send_lock:
                     worker.req_conn.send(
                         (pending.rid, pending.payload, pending.extra))
-                pending.sent = True
-                pending.t_sent = time.perf_counter()
+                # Commit the sent flag under the transport lock, re-checking
+                # the routing: the worker can die between the pipe write and
+                # here, in which case _on_worker_failure has already
+                # re-routed this pending to the replacement (it saw
+                # sent=False, so it expects *this* loop to deliver) —
+                # blindly marking it sent stranded the invocation until its
+                # timeout, with nobody ever writing it to the new pipe.
+                with self._lock:
+                    if pending.worker is worker:
+                        pending.sent = True
+                        pending.t_sent = time.perf_counter()
             except (BrokenPipeError, OSError):
                 self._on_worker_failure(worker)
 
     # ------------------------------------------------------------ collection
 
     def _collect_loop(self) -> None:
-        while not self._closed:
+        while not self._closed:  # squash: ignore[lock-guarded-access] -- lock-free shutdown poll; a stale read costs one 0.25s wait tick, never correctness
             with self._lock:
                 live = [w for ws in self._workers.values()
                         for w in ws if not w.dead]
@@ -398,7 +408,7 @@ class ProcessTransport(Transport):
             except OSError:      # a pipe vanished mid-wait; re-scan
                 continue
             for r in ready:
-                if self._closed:
+                if self._closed:  # squash: ignore[lock-guarded-access] -- lock-free shutdown poll; close() owns failing the stragglers
                     return
                 # The collector must survive anything a single worker's
                 # failure path throws — a dead collector silently turns
@@ -409,11 +419,13 @@ class ProcessTransport(Transport):
                     else:
                         self._on_worker_failure(sentinels[r])
                 except Exception:                        # noqa: BLE001
+                    _METRICS.counter(
+                        f"transport.{self.kind}.swallowed_errors").inc()
                     continue
 
     def _drain(self, worker: _Worker) -> None:
         try:
-            msg = worker.resp_conn.recv()
+            msg = worker.resp_conn.recv()  # squash: ignore[wire-raw-socket] -- mp pipe Connection.recv, not a TCP socket; the payload inside was budget-checked at submit
         except (EOFError, OSError):
             self._on_worker_failure(worker)
             return
@@ -527,7 +539,8 @@ class ProcessTransport(Transport):
             self._send(p)
         self._reap(worker)
 
-    def _fail_locked(self, pendings: List[_Pending], exc: Exception) -> None:
+    def _fail_locked(self, pendings: List[_Pending],
+                     exc: Exception) -> None:  # squash: holds[_lock]
         """Fail + forget pendings (caller holds the lock) — failed entries
         must not linger in ``_pending`` or they accumulate for the
         transport's lifetime and get re-scanned on every later failure."""
@@ -543,7 +556,7 @@ class ProcessTransport(Transport):
             for conn in (worker.req_conn, worker.resp_conn):
                 conn.close()
         except (OSError, ValueError):
-            pass
+            _METRICS.counter("transport.process.swallowed_errors").inc()
 
     # --------------------------------------------------------------- lifecycle
 
@@ -554,10 +567,14 @@ class ProcessTransport(Transport):
                     if not w.dead]
 
     def close(self) -> None:
-        if self._closed:
-            return
-        self._closed = True
+        # Check-and-set under the lock: two racing close() calls (user +
+        # __del__, or two fixtures sharing a transport) both used to pass
+        # the unlocked `if self._closed` test, double-sending SHUTDOWN and
+        # double-closing every pipe.
         with self._lock:
+            if self._closed:
+                return
+            self._closed = True
             workers = [w for ws in self._workers.values() for w in ws]
             for p in self._pending.values():
                 if not p.resolved:
@@ -569,7 +586,8 @@ class ProcessTransport(Transport):
                 with w.send_lock:
                     w.req_conn.send(wk.SHUTDOWN)
             except (BrokenPipeError, OSError, ValueError):
-                pass
+                _METRICS.counter(
+                    f"transport.{self.kind}.swallowed_errors").inc()
         for w in workers:
             w.proc.join(timeout=2.0)
         for w in workers:
@@ -580,7 +598,8 @@ class ProcessTransport(Transport):
                 try:
                     conn.close()
                 except (OSError, ValueError):
-                    pass
+                    _METRICS.counter(
+                        f"transport.{self.kind}.swallowed_errors").inc()
         if self._collector.is_alive():
             self._collector.join(timeout=1.0)
 

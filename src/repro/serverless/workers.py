@@ -327,7 +327,7 @@ def worker_main(init: WorkerInit, req_conn, resp_conn) -> None:
     server = RequestServer(init)
     while True:
         try:
-            msg = req_conn.recv()
+            msg = req_conn.recv()  # squash: ignore[wire-raw-socket] -- mp pipe Connection.recv, not a TCP socket; the payload inside was budget-checked at submit
         except (EOFError, OSError):
             break
         if msg is SHUTDOWN:

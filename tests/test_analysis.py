@@ -1,0 +1,420 @@
+"""squashlint self-tests: fixture corpus per rule + whole-repo cleanliness.
+
+Each checker gets at least one true-positive snippet and one clean snippet,
+the pragma/baseline machinery is exercised end to end, and the final test
+runs the real suite over ``src/repro`` asserting zero unbaselined findings —
+the same gate CI enforces with ``python -m repro.analysis --strict``.
+"""
+
+import json
+import textwrap
+
+import pytest
+
+from repro.analysis import locks, runner
+from repro.analysis.findings import Finding, count_by_key
+from repro.analysis.runner import Report, analyze_source, analyze_tree
+from repro.analysis.source import parse_source
+
+
+def rules_of(text, rel="serverless/somefile.py"):
+    findings, _ = analyze_source(rel, textwrap.dedent(text))
+    return sorted(f.rule for f in findings)
+
+
+def findings_of(text, rel="serverless/somefile.py"):
+    findings, _ = analyze_source(rel, textwrap.dedent(text))
+    return findings
+
+
+# ---------------------------------------------------------------- lock rule
+
+LOCKED_CLASS = """
+    import threading
+
+    class Pool:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.count = 0  # guarded-by: _lock
+
+        def bump(self):
+            {body}
+"""
+
+
+def test_lock_guarded_access_true_positive():
+    text = LOCKED_CLASS.format(body="self.count += 1")
+    assert rules_of(text) == ["lock-guarded-access"]
+
+
+def test_lock_guarded_access_clean_under_with():
+    text = LOCKED_CLASS.format(
+        body="with self._lock:\n                self.count += 1")
+    assert rules_of(text) == []
+
+
+def test_lock_guarded_access_constructor_exempt():
+    # The __init__ assignment itself must not be flagged (pre-publication).
+    text = LOCKED_CLASS.format(body="pass")
+    assert rules_of(text) == []
+
+
+def test_lock_holds_contract_honored():
+    text = """
+    import threading
+
+    class Pool:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.count = 0  # guarded-by: _lock
+
+        def _bump_locked(self):  # squash: holds[_lock]
+            self.count += 1
+    """
+    assert rules_of(text) == []
+
+
+def test_lock_holds_contract_on_wrapped_signature():
+    # The pragma may sit on a continuation line of a multi-line def.
+    text = """
+    import threading
+
+    class Pool:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.count = 0  # guarded-by: _lock
+
+        def _bump_locked(self, a_very_long_parameter_name,
+                         another_one):  # squash: holds[_lock]
+            self.count += 1
+    """
+    assert rules_of(text) == []
+
+
+def test_lock_nested_def_does_not_inherit_held_set():
+    # A nested def is a thread target: the with-scope must not leak into it.
+    text = """
+    import threading
+
+    class Pool:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.count = 0  # guarded-by: _lock
+
+        def go(self):
+            with self._lock:
+                def worker():
+                    self.count += 1
+                return worker
+    """
+    assert rules_of(text) == ["lock-guarded-access"]
+
+
+def test_lock_order_cycle_detected():
+    text = textwrap.dedent("""
+    import threading
+
+    class A:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.send_lock = threading.Lock()
+
+        def one(self):
+            with self._lock:
+                with self.send_lock:
+                    pass
+
+        def two(self):
+            with self.send_lock:
+                with self._lock:
+                    pass
+    """)
+    _, edges = analyze_source("serverless/a.py", text)
+    cycle_findings = locks.order_cycles(edges)
+    assert {f.rule for f in cycle_findings} == {"lock-order"}
+    assert len(cycle_findings) == 2          # both inversion sites anchored
+
+
+def test_lock_order_clean_when_consistent():
+    text = textwrap.dedent("""
+    import threading
+
+    class A:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.send_lock = threading.Lock()
+
+        def one(self):
+            with self._lock:
+                with self.send_lock:
+                    pass
+
+        def two(self):
+            with self._lock:
+                with self.send_lock:
+                    pass
+    """)
+    _, edges = analyze_source("serverless/a.py", text)
+    assert edges                             # the graph saw the nesting
+    assert locks.order_cycles(edges) == []
+
+
+# ------------------------------------------------------- determinism rules
+
+def test_wallclock_flagged_in_parity_scope():
+    text = """
+    import time
+
+    def stamp():
+        return time.perf_counter()
+    """
+    assert rules_of(text, rel="core/util.py") == ["wallclock"]
+
+
+def test_wallclock_ignored_outside_parity_scope():
+    text = """
+    import time
+
+    def stamp():
+        return time.perf_counter()
+    """
+    assert rules_of(text, rel="serverless/transport.py") == []
+
+
+def test_unseeded_rng_true_positive_and_clean():
+    dirty = """
+    import numpy as np
+
+    def noise(n):
+        return np.random.rand(n)
+    """
+    clean = """
+    import numpy as np
+
+    def noise(n, seed):
+        return np.random.default_rng(seed).random(n)
+    """
+    assert rules_of(dirty, rel="core/x.py") == ["unseeded-rng"]
+    assert rules_of(clean, rel="core/x.py") == []
+
+
+def test_set_iteration_true_positive_and_sorted_clean():
+    dirty = """
+    def order(items):
+        return [x for x in set(items)]
+    """
+    clean = """
+    def order(items):
+        return [x for x in sorted(set(items))]
+    """
+    assert rules_of(dirty, rel="core/x.py") == ["set-iteration"]
+    assert rules_of(clean, rel="core/x.py") == []
+
+
+# -------------------------------------------------------------- wire rules
+
+def test_wire_pickle_flagged_outside_codec():
+    text = """
+    import pickle
+
+    def ship(obj):
+        return pickle.dumps(obj)
+    """
+    assert rules_of(text, rel="serverless/rogue.py") == ["wire-pickle"]
+
+
+def test_wire_rules_allowlisted_in_payload_module():
+    text = """
+    import pickle
+
+    def ship(sock, obj):
+        sock.sendall(pickle.dumps(obj))
+    """
+    assert rules_of(text, rel="serverless/payload.py") == []
+
+
+def test_wire_raw_socket_flagged():
+    text = """
+    def pump(sock):
+        return sock.recv(4096)
+    """
+    assert rules_of(text, rel="serverless/rogue.py") == ["wire-raw-socket"]
+
+
+# --------------------------------------------------------------- jit rules
+
+def test_jit_per_call_true_positive():
+    text = """
+    import jax
+
+    def search(f, x):
+        return jax.jit(f)(x)
+    """
+    assert rules_of(text, rel="core/distributed.py") == ["jit-per-call"]
+
+
+def test_jit_cached_wrapper_clean():
+    text = """
+    import jax
+
+    def make(f):
+        g = jax.jit(f)
+        def run(x):
+            return g(x)
+        return run
+    """
+    assert rules_of(text, rel="core/distributed.py") == []
+
+
+def test_jit_concretize_item_flagged():
+    text = """
+    import jax
+
+    @jax.jit
+    def f(x):
+        return x.sum().item()
+    """
+    assert rules_of(text, rel="kernels/k.py") == ["jit-concretize"]
+
+
+def test_jit_shape_arithmetic_clean():
+    text = """
+    import jax
+
+    @jax.jit
+    def f(x):
+        scale = float(x.shape[0])
+        return x * scale
+    """
+    assert rules_of(text, rel="kernels/k.py") == []
+
+
+def test_jit_mutable_global_flagged():
+    text = """
+    import jax
+    import numpy as np
+
+    TABLE = np.zeros(8)
+
+    @jax.jit
+    def f(x):
+        return x + TABLE
+    """
+    assert rules_of(text, rel="kernels/k.py") == ["jit-mutable-global"]
+
+
+def test_jit_static_argnames_flagged_and_clean():
+    dirty = """
+    import jax
+    from functools import partial
+
+    @partial(jax.jit)
+    def f(x, k=10):
+        return x[:k]
+    """
+    clean = """
+    import jax
+    from functools import partial
+
+    @partial(jax.jit, static_argnames=("k",))
+    def f(x, k=10):
+        return x[:k]
+    """
+    assert rules_of(dirty, rel="core/dataplane.py") == ["jit-static-argnames"]
+    assert rules_of(clean, rel="core/dataplane.py") == []
+
+
+# ------------------------------------------------------ pragmas + baseline
+
+def test_pragma_with_justification_suppresses():
+    text = """
+    import time
+
+    def stamp():
+        return time.perf_counter()  # squash: ignore[wallclock] -- trace timing only
+    """
+    assert rules_of(text, rel="core/x.py") == []
+
+
+def test_pragma_without_justification_is_bad_pragma():
+    text = """
+    import time
+
+    def stamp():
+        return time.perf_counter()  # squash: ignore[wallclock]
+    """
+    assert rules_of(text, rel="core/x.py") == ["bad-pragma"]
+
+
+def test_pragma_for_wrong_rule_does_not_suppress():
+    text = """
+    import time
+
+    def stamp():
+        return time.perf_counter()  # squash: ignore[wire-pickle] -- wrong rule
+    """
+    assert "wallclock" in rules_of(text, rel="core/x.py")
+
+
+def test_parse_error_is_a_finding():
+    findings = findings_of("def broken(:\n", rel="core/x.py")
+    assert [f.rule for f in findings] == ["parse-error"]
+
+
+def _finding(rule="wallclock", path="core/x.py", line=3):
+    return Finding(path, line, rule, "msg")
+
+
+def test_baseline_covers_known_findings():
+    f = _finding()
+    report = Report([f], {f.key: 1})
+    assert report.clean and report.ratchet_ok
+    assert report.baselined == [f]
+
+
+def test_new_finding_fails_even_with_baseline():
+    f, g = _finding(), _finding(line=9)
+    report = Report([f, g], {f.key: 1})       # key covers only one of two
+    assert not report.clean
+    assert len(report.new) == 1
+
+
+def test_stale_baseline_trips_ratchet():
+    report = Report([], {"wallclock:core/x.py": 2})
+    assert report.clean                       # nothing new...
+    assert not report.ratchet_ok              # ...but the debt must shrink
+    assert report.stale == {"wallclock:core/x.py": 2}
+
+
+def test_update_baseline_roundtrip(tmp_path):
+    f = _finding()
+    path = str(tmp_path / "baseline.json")
+    runner.save_baseline(count_by_key([f]), path)
+    assert runner.load_baseline(path) == {f.key: 1}
+    data = json.loads((tmp_path / "baseline.json").read_text())
+    assert "entries" in data
+
+
+def test_guarded_attrs_extracted_from_annotations():
+    src = parse_source("x.py", textwrap.dedent("""
+    class C:
+        def __init__(self):
+            self.a = 0  # guarded-by: _lock
+            self.b = 0
+    """))
+    assert src.guarded_attrs() == {"a": {"_lock"}}
+
+
+# ------------------------------------------------------------- whole repo
+
+def test_repo_is_clean_under_strict():
+    """The CI gate: zero unbaselined findings, no stale baseline debt."""
+    report = analyze_tree(runner.default_root())
+    assert report.new == [], "\n".join(f.render() for f in report.new)
+    assert report.ratchet_ok, f"stale baseline entries: {report.stale}"
+
+
+def test_cli_strict_exits_zero(capsys):
+    assert runner.main(["--strict"]) == 0
+    out = capsys.readouterr().out
+    assert "squashlint: clean" in out

@@ -1,0 +1,330 @@
+"""Targeted regression tests for the races squashlint's rollout surfaced.
+
+Each test pins one concrete fix (see DESIGN.md "Static invariants"):
+
+* ``Gauge.inc`` lost updates (read-modify-write with no lock);
+* ``Histogram`` dump methods read mutating state without the lock;
+* both transports' ``close()`` used a non-atomic check-and-set of
+  ``_closed``, so two racing closers double-sent SHUTDOWN;
+* ``ProcessTransport._send`` marked ``sent`` without re-checking routing,
+  stranding an invocation re-routed by the failure path mid-send;
+* ``SocketTransport._on_response`` reassembled response pages outside the
+  transport lock, racing the failure path's ``pages.clear()``.
+
+The transport tests run against stub workers/links (no processes spawned),
+so this module stays in tier 1.
+"""
+
+import threading
+
+import numpy as np
+
+from repro.obs.metrics import Counter, Gauge, Histogram
+from repro.serverless import payload as pl
+from repro.serverless import transport as tp
+from repro.serverless import workers as wk
+from repro.serverless.socket_transport import SocketTransport, _Link
+
+
+THREADS = 8
+INCS = 5000
+
+
+def hammer(fn):
+    barrier = threading.Barrier(THREADS)
+
+    def run():
+        barrier.wait()
+        for _ in range(INCS):
+            fn()
+
+    ts = [threading.Thread(target=run) for _ in range(THREADS)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+
+
+# ------------------------------------------------------------------ metrics
+
+def test_gauge_inc_is_atomic():
+    g = Gauge("g")
+    hammer(lambda: g.inc(1))
+    assert g.value == THREADS * INCS
+
+
+def test_counter_inc_is_atomic():
+    c = Counter("c")
+    hammer(lambda: c.inc(1))
+    assert c.value == THREADS * INCS
+
+
+def test_histogram_dump_is_consistent_snapshot():
+    """buckets must always sum to count, even mid-hammer."""
+    h = Histogram("h", buckets=(1.0, 2.0, 4.0))
+    stop = threading.Event()
+    bad = []
+
+    def snapshot_loop():
+        while not stop.is_set():
+            total = sum(h.bucket_counts().values())
+            count = h.count
+            # count was read *after* the bucket snapshot, so it can only
+            # have grown — never the reverse.
+            if total > count:
+                bad.append((total, count))
+
+    snap = threading.Thread(target=snapshot_loop)
+    snap.start()
+    try:
+        hammer(lambda: h.observe(1.5))
+    finally:
+        stop.set()
+        snap.join()
+    assert not bad, f"inconsistent snapshots: {bad[:3]}"
+    assert h.count == THREADS * INCS
+    assert sum(h.bucket_counts().values()) == THREADS * INCS
+
+
+def test_histogram_bucket_counts_blocks_on_lock():
+    """White-box: the dump path takes the instrument lock (the fix)."""
+    h = Histogram("h", buckets=(1.0,))
+    h.observe(0.5)
+    got = []
+    with h._lock:
+        t = threading.Thread(target=lambda: got.append(h.bucket_counts()))
+        t.start()
+        t.join(timeout=0.2)
+        assert not got, "bucket_counts() read state without the lock"
+    t.join(timeout=2.0)
+    assert got and sum(got[0].values()) == 1
+
+
+# ------------------------------------------------- ProcessTransport stubs
+
+class _StubConn:
+    """Pipe-end stand-in recording sends; optional per-send side effect."""
+
+    def __init__(self, side_effect=None):
+        self.sent = []
+        self.side_effect = side_effect
+        self.closed = False
+
+    def send(self, msg):
+        self.sent.append(msg)
+        if self.side_effect is not None:
+            self.side_effect(msg)
+
+    def close(self):
+        self.closed = True
+
+
+class _StubProc:
+    def __init__(self):
+        self.terminated = False
+
+    def join(self, timeout=None):
+        pass
+
+    def is_alive(self):
+        return False
+
+    def terminate(self):
+        self.terminated = True
+
+
+def _stub_worker(fn="qp:0", side_effect=None):
+    w = object.__new__(tp._Worker)
+    w.req_conn = _StubConn(side_effect)
+    w.resp_conn = _StubConn()
+    w.proc = _StubProc()
+    w.fn = fn
+    w.assigned = 0
+    w.done = 0
+    w.dead = False
+    w.send_lock = threading.Lock()
+    return w
+
+
+def _stub_process_transport(workers):
+    t = object.__new__(tp.ProcessTransport)
+    t.eager = True
+    t.invoke_timeout_s = 5.0
+    t.max_retries = 2
+    t._lock = threading.Lock()
+    t._pending = {}
+    t._timed_out = {}
+    t._dead_births = {}
+    t._respawning = {}
+    t._closed = False
+    t._workers = {"qp:0": list(workers)}
+    t._collector = threading.Thread(target=lambda: None)
+    t._collector.start()
+    t._collector.join()
+    return t
+
+
+def test_process_close_is_atomic_under_racing_closers():
+    workers = [_stub_worker() for _ in range(3)]
+    t = _stub_process_transport(workers)
+    barrier = threading.Barrier(4)
+
+    def closer():
+        barrier.wait()
+        t.close()
+
+    ts = [threading.Thread(target=closer) for _ in range(4)]
+    for th in ts:
+        th.start()
+    for th in ts:
+        th.join()
+    for w in workers:
+        shutdowns = [m for m in w.req_conn.sent if m is wk.SHUTDOWN]
+        assert len(shutdowns) == 1, "racing close() double-sent SHUTDOWN"
+
+
+def test_send_rechecks_routing_before_marking_sent():
+    """A pending re-routed mid-send must still reach its new worker.
+
+    The failure path re-routes an *unsent* pending and expects the _send
+    loop that owns it to deliver; marking ``sent`` without re-checking the
+    routing stranded the invocation until its timeout.
+    """
+    replacement = _stub_worker("qp:0")
+    pending = tp._Pending(0, "qp:0", b"payload", {})
+
+    def reroute(_msg):
+        # Simulates _on_worker_failure landing between the pipe write and
+        # the sent-flag commit: the pending now belongs to `replacement`.
+        pending.worker = replacement
+        replacement.assigned += 1
+
+    original = _stub_worker("qp:0", side_effect=reroute)
+    t = _stub_process_transport([original, replacement])
+    pending.worker = original
+    original.assigned += 1
+    t._pending[0] = pending
+
+    t._send(pending)
+
+    assert pending.sent
+    assert len(replacement.req_conn.sent) == 1, \
+        "re-routed pending never delivered to its replacement worker"
+
+
+# --------------------------------------------------- SocketTransport stubs
+
+def _stub_socket_transport():
+    t = object.__new__(SocketTransport)
+    t._lock = threading.Lock()
+    t._pending = {}
+    t._timed_out = {}
+    t._closed = False
+    return t
+
+
+def _stub_link():
+    link = object.__new__(_Link)
+    link.fn = "qp:0"
+    link.address = ("127.0.0.1", 1)
+    link.assigned = 0
+    link.done = 0
+    link.dead = False
+    link.generation = 0
+    link.pages = {}
+    return link
+
+
+def _resp_body(rid, seq, nseq, data=b"x"):
+    return pl.encode_message({
+        "rid": rid, "ok": True, "seq": seq, "nseq": nseq,
+        "info": {"os_pid": 0},
+        "data": np.frombuffer(data, dtype=np.uint8),
+    })
+
+
+def test_on_response_reassembles_under_transport_lock():
+    """White-box: page reassembly holds _lock (the fix), so the failure
+    path's ``pages.clear()`` can never interleave with it."""
+    t = _stub_socket_transport()
+    link = _stub_link()
+    done = []
+    with t._lock:
+        th = threading.Thread(target=lambda: done.append(
+            t._on_response(link, _resp_body(7, 0, 2))))
+        th.start()
+        th.join(timeout=0.2)
+        assert not done, "_on_response touched link.pages without _lock"
+    th.join(timeout=2.0)
+    assert done
+    assert 7 in link.pages                    # first page parked, incomplete
+
+
+def test_on_response_survives_concurrent_page_clear():
+    """Hammer reassembly against the failure path's pages.clear()."""
+    t = _stub_socket_transport()
+    link = _stub_link()
+    errors = []
+    stop = threading.Event()
+
+    def clear_loop():
+        while not stop.is_set():
+            with t._lock:
+                link.pages.clear()
+
+    clearer = threading.Thread(target=clear_loop)
+    clearer.start()
+    try:
+        for rid in range(300):
+            try:
+                t._on_response(link, _resp_body(rid, 0, 2))
+                t._on_response(link, _resp_body(rid, 1, 2))
+            except Exception as exc:          # noqa: BLE001
+                errors.append(exc)
+                break
+    finally:
+        stop.set()
+        clearer.join()
+    assert not errors, f"page reassembly raced the clear: {errors[0]!r}"
+
+
+class _StubSock:
+    def __init__(self):
+        self.frames = []
+        self.closed = False
+
+    def sendall(self, data):
+        self.frames.append(bytes(data))
+
+    def close(self):
+        self.closed = True
+
+
+def test_socket_close_is_atomic_under_racing_closers():
+    t = _stub_socket_transport()
+    links = []
+    for _ in range(3):
+        link = _stub_link()
+        link.send_lock = threading.Lock()
+        link.sock = _StubSock()
+        links.append(link)
+    t._links = {"qp:0": links}
+    t._owned_hosts = []
+    t._monitor = None
+    barrier = threading.Barrier(4)
+
+    def closer():
+        barrier.wait()
+        t.close()
+
+    ts = [threading.Thread(target=closer) for _ in range(4)]
+    for th in ts:
+        th.start()
+    for th in ts:
+        th.join()
+    assert t._closed
+    for link in links:
+        assert link.sock.closed
+        shutdowns = [f for f in link.sock.frames
+                     if f[:1] == pl.FRAME_SHUTDOWN]
+        assert len(shutdowns) == 1, "racing close() double-sent SHUTDOWN"
