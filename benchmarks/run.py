@@ -211,6 +211,45 @@ def smoke() -> int:
         obs_registry.disable()
         obs_registry.reset()
 
+    # Search-under-mutation gate (live index, ISSUE 9): on its own small
+    # build — streaming insert + delete, then drop-only compaction, must be
+    # bitwise-invisible: ids AND SearchStats identical during-vs-after,
+    # numpy ≡ jax ≡ serverless at every step, tombstones never returned,
+    # and the §5.6 cache keeps serving entries compaction didn't touch.
+    from repro.core.live import LiveIndex
+
+    ds_m = synthetic.make_vector_dataset("sift1m", scale=0.002,
+                                         num_queries=8, seed=13)
+    idx_m = SquashIndex.build(
+        ds_m.vectors, ds_m.attributes,
+        SquashConfig(num_partitions=5, kmeans_iters=4, lloyd_iters=6),
+        seed=13)
+    live = LiveIndex(idx_m)
+    rt_m = ServerlessRuntime(live, RuntimeConfig(cache_enabled=True))
+    m0 = rt_m.search(ds_m.queries, [], k=10)
+    live.insert(ds_m.vectors[:4] + 1e-3, ds_m.attributes[:4])
+    live.delete(m0.ids[:, 0])
+    m_during = rt_m.search(ds_m.queries, [], k=10)
+    ref_n = idx_m.search(ds_m.queries, [], k=10, backend="numpy")
+    ref_j = idx_m.search(ds_m.queries, [], k=10, backend="jax")
+    assert np.array_equal(ref_n[0], ref_j[0]), "mutated numpy/jax diverged"
+    assert ref_n[2] == ref_j[2], "mutated numpy/jax stats drift"
+    assert np.array_equal(m_during.ids, ref_j[0]), "mutated serverless diverged"
+    assert m_during.stats == ref_j[2], "mutated serverless stats drift"
+    assert np.intersect1d(m_during.ids.ravel(), m0.ids[:, 0]).size == 0, (
+        "tombstoned ids leaked into results")
+    for pid in live.dirty_partitions():
+        live.compact(pid, requantize=False)
+    m_after = rt_m.search(ds_m.queries, [], k=10)
+    assert np.array_equal(m_after.ids, m_during.ids), (
+        "search during compaction != search after")
+    assert np.array_equal(m_after.dists, m_during.dists)
+    assert m_after.trace.cache_hits == ds_m.queries.shape[0], (
+        "drop-only compaction must not evict untouched cache entries")
+    ref_a = idx_m.search(ds_m.queries, [], k=10, backend="jax")
+    assert np.array_equal(ref_a[0], m_during.ids)
+    assert ref_a[2] == m_during.stats, "compaction changed stage counters"
+
     # Recall-targeted autotune gate: the calibrated per-partition profile
     # must hold recall at-or-above the static configuration's while
     # evaluating strictly fewer ADC candidates, with all three backends
@@ -244,7 +283,9 @@ def smoke() -> int:
           f"${t2.cost['total']:.6f}/batch; autotuned: recall@10="
           f"{tuned_recall:.3f} at {st_tn.adc_evals}/{static_adc} ADC evals; "
           f"obs: 3-transport trace at {os.path.relpath(trace_path)}, "
-          f"process invoke p50={obs_p50 * 1e3:.1f}ms p99={obs_p99 * 1e3:.1f}ms")
+          f"process invoke p50={obs_p50 * 1e3:.1f}ms p99={obs_p99 * 1e3:.1f}ms"
+          f"; live-index mutation gate: search during ≡ after compaction, "
+          f"{live.live_count()} live rows")
     return 0
 
 

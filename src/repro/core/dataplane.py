@@ -104,7 +104,9 @@ jax.tree_util.register_dataclass(
 
 
 def part_stack_arrays(pt, *, n_max: int, m1: int, d: int,
-                      dtype=np.float32) -> Dict[str, np.ndarray]:
+                      dtype=np.float32,
+                      live_rows: Optional[np.ndarray] = None
+                      ) -> Dict[str, np.ndarray]:
     """One partition's numpy slab of the stacked payload (no leading P axis).
 
     The field values are exactly what :func:`stack_index` writes at that
@@ -112,6 +114,10 @@ def part_stack_arrays(pt, *, n_max: int, m1: int, d: int,
     partition can rebuild ``stack_index(index)[pid:pid+1]`` bit-for-bit from
     (this dict, the global ``n_max``/``m1``) without the rest of the index —
     the contract the ProcessTransport parity tests pin.
+
+    ``live_rows`` (optional, (n,) bool) folds a live-index tombstone bitmap
+    into ``valid`` so Stage 3 (``batched_stage345``'s ``alive0`` mask) drops
+    dead rows even when a request names them as candidates.
     """
     n = pt.size
     g32 = pt.low.packed.shape[1]
@@ -132,7 +138,8 @@ def part_stack_arrays(pt, *, n_max: int, m1: int, d: int,
     out["low_packed"][:n] = pt.low.packed
     out["codes"][:n] = pt.codes
     out["vectors"][:n] = pt.vectors
-    out["valid"][:n] = True
+    out["valid"][:n] = True if live_rows is None else np.asarray(
+        live_rows, dtype=bool)
     out["vector_ids"][:n] = pt.vector_ids
     mb = pt.quant.boundaries.shape[0]
     out["boundaries"][:mb] = pt.quant.boundaries.astype(dtype)
@@ -175,8 +182,11 @@ def stack_index(index, pad_to_multiple: int = 1,
     boundaries = np.full((pad_p, m1, d), np.inf, dtype)
     cells = np.ones((pad_p, d), np.int32)
 
+    live_mask = getattr(index, "live_mask", None)
     for i, pt in enumerate(parts):
-        pa = part_stack_arrays(pt, n_max=n_max, m1=m1, d=d, dtype=dtype)
+        live_rows = None if live_mask is None else live_mask[pt.vector_ids]
+        pa = part_stack_arrays(pt, n_max=n_max, m1=m1, d=d, dtype=dtype,
+                               live_rows=live_rows)
         low_packed[i] = pa["low_packed"]
         codes[i] = pa["codes"]
         vectors[i] = pa["vectors"]

@@ -141,6 +141,8 @@ def distributed_search(
     cfg = index.config
     r = am.build_r_lookup(index.attr_index, predicates)
     f_one = np.asarray(am.filter_mask(r, index.attr_index.codes))
+    if getattr(index, "live_mask", None) is not None:
+        f_one = f_one & index.live_mask   # tombstoned rows fail Stage 1
     f = np.broadcast_to(f_one, (qn, f_one.shape[0]))
     visit, cands = pm.select_partitions(
         queries, index.partitioning.centroids, f,

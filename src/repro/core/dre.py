@@ -27,7 +27,7 @@ import dataclasses
 import random
 import sys
 from collections import OrderedDict
-from typing import Dict, Hashable, Optional, Set, Tuple
+from typing import Callable, Dict, Hashable, Iterable, Optional, Set, Tuple
 
 import numpy as np
 
@@ -89,6 +89,7 @@ class ContainerPool:
         self._epoch = 0                               # bumps on clear_derived
         self._next_container = 0
         self._free: list = []
+        self._free_set: Set[int] = set()   # mirrors _free for O(1) membership
         self._rng = random.Random(seed)
         self.warm_prob = warm_prob
         self.fetch_bandwidth_bps = fetch_bandwidth_bps
@@ -110,6 +111,7 @@ class ContainerPool:
         warm = bool(self._free) and self._rng.random() < self.warm_prob
         if warm:
             cid = self._free.pop()
+            self._free_set.discard(cid)
         else:
             cid = self._next_container
             self._next_container += 1
@@ -143,9 +145,12 @@ class ContainerPool:
         ``container_id`` entered ``_free`` twice and two concurrent leases
         were handed the *same* container — their warm/DRE accounting then
         described one singleton serving two in-flight invocations at once.
+        The membership check runs against a set mirror of ``_free``, so a
+        release stays O(1) even with thousands of idle containers.
         """
-        if lease.container_id not in self._free:
+        if lease.container_id not in self._free_set:
             self._free.append(lease.container_id)
+            self._free_set.add(lease.container_id)
 
     def invoke(self, data_key: Hashable, data_bytes: int, use_dre: bool = True
                ) -> Tuple[bool, bool]:
@@ -159,9 +164,17 @@ class ContainerPool:
                     use_dre: bool = True) -> bool:
         """True iff this lease's container already retains derived state
         under ``key`` (e.g. the device-resident partition slice built from a
-        previous fetch). Counted in ``stats.derived_hits``."""
+        previous fetch).
+
+        Counted once in the lease's per-call :class:`DreStats` delta *and*
+        in the pool's cumulative ``stats`` — mirroring how ``acquire``
+        records every other field — so callers that aggregate via
+        ``DreStats.merge`` on ``lease.stats`` see the hit without a separate
+        manual bump (which previously double-counted against the pool).
+        """
         hit = use_dre and key in self._derived.get(lease.container_id, ())
         if hit:
+            lease.stats.derived_hits += 1
             self.stats.derived_hits += 1
             _METRICS.counter("dre.pool.derived_hits").inc()
         return hit
@@ -217,6 +230,13 @@ class ResultCache:
     true least-recently-*used* order — ``get`` refreshes recency — under
     both an entry-count cap and an optional byte budget with per-entry size
     accounting.
+
+    Entries may carry a *partition dependency set* (``put(..., parts=...)``):
+    the ids a cached result returned can only change if one of those
+    partitions changes, so live-index mutations invalidate at segment
+    granularity via :meth:`invalidate_partitions` instead of dropping the
+    whole cache. Entries stored without a dependency set are conservatively
+    treated as depending on everything.
     """
 
     def __init__(self, capacity: int = 100_000,
@@ -225,11 +245,14 @@ class ResultCache:
         self.max_bytes = max_bytes
         self._store: "OrderedDict[Hashable, object]" = OrderedDict()
         self._sizes: Dict[Hashable, int] = {}
+        self._deps: Dict[Hashable, Optional[frozenset]] = {}
         self.current_bytes = 0
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.invalidations = 0
+        self.targeted_evictions = 0   # entries dropped by segment-granular
+                                      # invalidation (not LRU pressure)
         self.oversize_skips = 0   # puts dropped for exceeding the whole budget
 
     @staticmethod
@@ -266,8 +289,19 @@ class ResultCache:
         _METRICS.counter("dre.result_cache.misses").inc()
         return None
 
-    def put(self, key: Hashable, value: object) -> None:
+    def put(self, key: Hashable, value: object,
+            parts: Optional[Iterable[int]] = None) -> None:
+        """Admit ``value`` under ``key``; ``parts`` (optional) is the set of
+        partition ids the result depends on, consumed by
+        :meth:`invalidate_partitions`."""
         nbytes = _entry_nbytes(key, value)
+        if self.capacity < 1:
+            # A zero-entry cache can never retain anything: rejecting up
+            # front (like the oversize path) avoids admit-then-evict churn
+            # that misreported the drop as an LRU ``eviction``.
+            self.oversize_skips += 1
+            _METRICS.counter("dre.result_cache.oversize_skips").inc()
+            return
         if self.max_bytes is not None and nbytes > self.max_bytes:
             # Larger than the whole budget: never admitted — and checked
             # *before* touching the store, so an existing entry under the
@@ -280,8 +314,11 @@ class ResultCache:
         if key in self._store:
             self.current_bytes -= self._sizes.pop(key)
             del self._store[key]
+            self._deps.pop(key, None)
         self._store[key] = value
         self._sizes[key] = nbytes
+        self._deps[key] = None if parts is None else frozenset(
+            int(p) for p in parts)
         self.current_bytes += nbytes
         while self._store and (
             len(self._store) > self.capacity
@@ -290,6 +327,7 @@ class ResultCache:
         ):
             old_key, _ = self._store.popitem(last=False)
             self.current_bytes -= self._sizes.pop(old_key)
+            self._deps.pop(old_key, None)
             self.evictions += 1
             _METRICS.counter("dre.result_cache.evictions").inc()
 
@@ -297,9 +335,52 @@ class ResultCache:
         """Drop every entry (index rebuilt / dataset swapped)."""
         self._store.clear()
         self._sizes.clear()
+        self._deps.clear()
         self.current_bytes = 0
         self.invalidations += 1
         _METRICS.counter("dre.result_cache.invalidations").inc()
+
+    def _evict_keys(self, keys) -> int:
+        dropped = 0
+        for key in keys:
+            if key in self._store:
+                self.current_bytes -= self._sizes.pop(key)
+                del self._store[key]
+                self._deps.pop(key, None)
+                dropped += 1
+                self.targeted_evictions += 1
+                _METRICS.counter("dre.result_cache.targeted_evictions").inc()
+        return dropped
+
+    def invalidate_partitions(self, pids: Iterable[int]) -> int:
+        """Segment-granular invalidation: drop only entries whose dependency
+        set intersects ``pids`` (entries with no recorded dependency set are
+        dropped too — unknown deps must be treated as depending on every
+        partition). Returns the number of entries dropped."""
+        pid_set = frozenset(int(p) for p in pids)
+        doomed = [key for key, deps in self._deps.items()
+                  if deps is None or (deps & pid_set)]
+        dropped = self._evict_keys(doomed)
+        if dropped:
+            self.invalidations += 1
+            _METRICS.counter("dre.result_cache.invalidations").inc()
+        return dropped
+
+    def invalidate_where(self, pred: Callable[[Hashable, object], bool]) -> int:
+        """Drop entries for which ``pred(key, value)`` is true — the hook
+        live-index inserts use to evict only results a new vector could
+        displace. Returns the number of entries dropped."""
+        doomed = [key for key, value in self._store.items()
+                  if pred(key, value)]
+        dropped = self._evict_keys(doomed)
+        if dropped:
+            self.invalidations += 1
+            _METRICS.counter("dre.result_cache.invalidations").inc()
+        return dropped
+
+    def deps(self, key: Hashable) -> Optional[frozenset]:
+        """The recorded partition dependency set (None = unknown/all)."""
+        return self._deps.get(key)
 
     def __len__(self) -> int:
         return len(self._store)

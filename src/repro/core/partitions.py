@@ -34,11 +34,17 @@ class Partitioning:
         return int(self.centroids.shape[0])
 
     def residency_bitmap(self) -> np.ndarray:
-        """Compact P_V map: (P, N) bool — vector residency per partition."""
+        """Compact P_V map: (P, N) bool — vector residency per partition.
+
+        Rows with out-of-range assignment (the ``assign == P`` sentinel a
+        live-index compaction leaves on physically removed vectors) reside
+        nowhere.
+        """
         p = self.num_partitions
         n = self.assign.shape[0]
         pv = np.zeros((p, n), dtype=bool)
-        pv[self.assign, np.arange(n)] = True
+        resident = self.assign < p
+        pv[self.assign[resident], np.arange(n)[resident]] = True
         return pv
 
 

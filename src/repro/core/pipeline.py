@@ -120,6 +120,14 @@ class SquashIndex:
         self.parts = parts
         self.attr_index = attr_index
         self.dim = dim
+        # Liveness bitmap over global vector ids (core/live.py). None for a
+        # frozen index — zero overhead on the static path. When set, dead
+        # (tombstoned) rows are excluded from the Stage 1 filter mask and
+        # defensively masked again in Stage 3 on every backend.
+        self.live_mask: Optional[np.ndarray] = None
+        # Back-reference to the owning LiveIndex (set by core/live.py) so
+        # the serverless runtime can pull mutation events lazily.
+        self.live_owner = None
         # Optional recall-targeted calibration (core/autotune.py): when set,
         # per-partition keep fractions + a calibrated floor replace the
         # static hamming_perc / min_hamming_keep in every data plane.
@@ -245,9 +253,14 @@ class SquashIndex:
         qn = queries.shape[0]
         stats = SearchStats(queries=qn)
 
-        # Stage 1 — attribute filtering (global mask F per query).
+        # Stage 1 — attribute filtering (global mask F per query). Dead
+        # (tombstoned) rows fail the filter outright: they can never become
+        # Stage 2 candidates on any backend, which is what keeps mutation
+        # bitwise-invisible to the downstream stages.
         r = attr_mod.build_r_lookup(self.attr_index, predicates)
         f_one = np.asarray(attr_mod.filter_mask(r, self.attr_index.codes))
+        if self.live_mask is not None:
+            f_one = f_one & self.live_mask
         f = np.broadcast_to(f_one, (qn, f_one.shape[0]))
         stats.filter_pass += int(f_one.sum()) * qn
 
@@ -373,6 +386,15 @@ class SquashIndex:
         from repro.core import autotune
 
         cfg = self.config
+        # Stage 3 tombstone mask (defense in depth): Stage 1 already fails
+        # dead rows, but requests constructed outside `search` (e.g. a raw
+        # QP request) must still never return a tombstoned id.
+        if self.live_mask is not None:
+            alive = self.live_mask[part.vector_ids[local_rows]]
+            if not alive.all():
+                local_rows = local_rows[alive]
+        if local_rows.size == 0:
+            return (np.empty(0, dtype=np.int64), np.empty(0, dtype=np.float64))
         qt = part.transform(query)
 
         # Stage 3 — low-bit OSQ Hamming pruning (only rows passing the filter).

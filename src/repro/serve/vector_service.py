@@ -79,7 +79,8 @@ class VectorSearchService:
     """One QueryAllocator front-end bound to a resident SquashIndex."""
 
     def __init__(self, index: SquashIndex, config: Optional[ServiceConfig] = None):
-        self.index = index
+        base = getattr(index, "base", None)     # accept a LiveIndex wrapper
+        self.index = base if isinstance(base, SquashIndex) else index
         self.config = config or ServiceConfig()
         if self.config.backend not in _CALL_BACKENDS + ("auto",):
             raise ValueError(f"unknown backend {self.config.backend!r}")
@@ -137,18 +138,22 @@ class VectorSearchService:
         return self._runtime.result_cache if self._runtime else None
 
     def swap_index(self, index: SquashIndex) -> None:
-        """Rebind the service to a rebuilt index.
+        """Rebind the service to a rebuilt (or live-wrapped) index.
 
-        Drops the serverless runtime (its stacked device payload, container
-        pools, worker processes and result cache all describe the old index)
-        so the next serverless call rebuilds against the new one — cached
-        results from the old index can never be served, and process workers
-        holding old shards are shut down rather than leaked.
+        The serverless runtime survives the swap via
+        ``ServerlessRuntime.rebind``: its container pools keep their warm
+        containers while the version bump stales every fetch/derived
+        singleton key and the epoch bump drains in-flight leases — cached
+        results and retained state from the old index can never be served,
+        without the old cost of discarding the whole runtime (and its real
+        worker fleet's warmth model) on every swap. Process/socket workers
+        holding old shards are still shut down and respawn with fresh
+        bundles on the next call.
         """
-        self.index = index
+        base = getattr(index, "base", None)     # accept a LiveIndex wrapper
+        self.index = base if isinstance(base, SquashIndex) else index
         if self._runtime is not None:
-            self._runtime.close()
-        self._runtime = None
+            self._runtime.rebind(self.index)
         self._calibrate()
 
     def close(self) -> None:

@@ -113,6 +113,12 @@ class QueryAllocator:
                           partitions_visited=0, escalations=0)
         r = attr_mod.build_r_lookup(idx.attr_index, predicates)
         f_one = np.asarray(attr_mod.filter_mask(r, idx.attr_index.codes))
+        live = getattr(idx, "live_mask", None)
+        if live is not None:
+            # Live-index tombstones fail Stage 1 — same masking the
+            # in-process pipeline applies, so QA candidate sets (and hence
+            # every downstream stage counter) stay bitwise-identical.
+            f_one = f_one & live
         f = np.broadcast_to(f_one, (m, f_one.shape[0]))
         pg = idx.partitioning
         # §2.5 escalation accounting happens inside Alg. 1 itself (visits

@@ -84,6 +84,14 @@ from repro.serverless.traces import NodeTrace, RunTrace, assemble_run_trace
 __all__ = ["RuntimeConfig", "SearchResult", "ServerlessRuntime"]
 
 
+def _unwrap_live(index):
+    """Accept either a ``SquashIndex`` or its ``LiveIndex`` wrapper."""
+    base = getattr(index, "base", None)
+    if base is not None and getattr(base, "live_owner", None) is index:
+        return base
+    return index
+
+
 @dataclasses.dataclass
 class RuntimeConfig:
     """Topology, latency model, payload budget and pricing of one deployment."""
@@ -236,7 +244,8 @@ class ServerlessRuntime:
     def __init__(self, index: SquashIndex, config: Optional[RuntimeConfig] = None):
         import jax
 
-        self.index = index
+        self.index = _unwrap_live(index)
+        index = self.index
         self.cfg = config or RuntimeConfig()
         self.n_qp = len(index.parts)
         self.n_qa = invocation.tree_size(self.cfg.branching, self.cfg.max_level)
@@ -260,6 +269,12 @@ class ServerlessRuntime:
                         max_bytes=self.cfg.result_cache_bytes)
             if self.cfg.cache_enabled else None)
         self.index_version = 0
+        # Mutation-log cursor into the index's LiveIndex owner (if any):
+        # `search` drains events past it lazily (pull model), so the runtime
+        # stays consistent with streaming inserts/deletes/compactions
+        # without the index ever holding a runtime reference.
+        live = getattr(index, "live_owner", None)
+        self._live_cursor = live.version if live is not None else 0
         self._dtype = np.float64 if jax.config.jax_enable_x64 else np.float32
         self._stacked = None
         self._processors: Dict[int, nd.QueryProcessor] = {}
@@ -427,24 +442,188 @@ class ServerlessRuntime:
             self._planes[key] = plane
         return plane
 
-    def invalidate_cache(self) -> None:
-        """Drop cached results and retained derived state.
+    def invalidate_cache(self, pids: Optional[Sequence[int]] = None) -> None:
+        """Drop cached results and retained DRE state, whole or per-segment.
 
-        Bumping ``index_version`` makes every container's retained derived
-        state stale (their keys embed the version); clearing the pools'
-        retained sets keeps permanently-stale keys from accumulating, and
-        bumps the pools' epoch so an in-flight lease cannot resurrect the
-        cleared state on release. This does NOT rebind the runtime to new
-        index data — the stacked device payload, per-partition processors
-        and process workers still describe the index this runtime was built
-        on. To serve a *rebuilt* index, build a new ``ServerlessRuntime``
-        (``VectorSearchService.swap_index`` does).
+        With ``pids=None`` (whole-index): bumping ``index_version`` makes
+        every container's retained state stale — *both* the fetch-level
+        singletons and the derived state embed the version in their keys, so
+        a warm container acquired afterwards pays the S3 fetch and the setup
+        again. Clearing the pools' retained sets keeps permanently-stale
+        keys from accumulating, and bumps the pools' epoch so an in-flight
+        lease cannot resurrect the cleared state on release.
+
+        With ``pids`` (segment-granular, the live-index path): only the
+        named partitions' result-cache entries are evicted (dependency-set
+        intersection) and only their pools — plus the allocator's, whose
+        bundle always covers every partition — drop retained state; fetch
+        keys go stale through the per-partition *generation* they embed, so
+        untouched partitions keep their warm retention.
+
+        Neither form rebinds the runtime to new index *data* — ``rebind``
+        (or the live-index event sync in ``search``) does that.
         """
-        self.index_version += 1
+        if pids is None:
+            self.index_version += 1
+            if self.result_cache is not None:
+                self.result_cache.invalidate()
+            for pool in (self.qa_pool, *self.qp_pools.values()):
+                pool.clear_derived()
+            return
         if self.result_cache is not None:
-            self.result_cache.invalidate()
-        for pool in (self.qa_pool, *self.qp_pools.values()):
-            pool.clear_derived()
+            self.result_cache.invalidate_partitions(pids)
+        self.qa_pool.clear_derived()
+        for pid in pids:
+            if pid in self.qp_pools:
+                self.qp_pools[pid].clear_derived()
+
+    # ------------------------------------------------------ live-index state
+
+    def _generation(self, pid: int) -> int:
+        """The partition's live-index generation (0 for a frozen index)."""
+        live = getattr(self.index, "live_owner", None)
+        return live.generations[pid] if live is not None else 0
+
+    def _qa_generation(self) -> int:
+        """Generation of the QA-visible state (partitioning + attributes +
+        tombstones): any mutation changes it, so the mutation counter is
+        the natural key component."""
+        live = getattr(self.index, "live_owner", None)
+        return live.version if live is not None else 0
+
+    def _sync_index(self) -> None:
+        """Drain the LiveIndex mutation log and rebind derived state.
+
+        Pull model: mutations only record events; the next ``search`` pays
+        the rebinding — stacked payload and touched per-partition processors
+        drop (they rebuild from the mutated index), real-transport workers
+        restart with fresh bundles, touched pools' derived state clears
+        (their keys embed the new generations anyway — the clear stops stale
+        keys accumulating and epoch-fences in-flight leases), and the result
+        cache invalidates at segment granularity per event kind.
+        """
+        live = getattr(self.index, "live_owner", None)
+        if live is None:
+            return
+        cursor, events = live.events_since(self._live_cursor)
+        if not events:
+            return
+        self._live_cursor = cursor
+        touched = sorted({pid for ev in events for pid in ev.pids})
+        self._stacked = None
+        for pid in touched:
+            self._processors.pop(pid, None)
+        if self.is_real:
+            # Live workers hold bundles of the pre-mutation index; closing
+            # the transport respawns them lazily with fresh bundles. The
+            # modeled pools survive — the virtual warm/fetch economics are
+            # what the local transport reports.
+            self.close()
+        self.qa_pool.clear_derived()
+        for pid in touched:
+            if pid in self.qp_pools:
+                self.qp_pools[pid].clear_derived()
+        if self.result_cache is not None:
+            for ev in events:
+                self._invalidate_cache_for_event(ev)
+
+    def _invalidate_cache_for_event(self, ev) -> None:
+        """Segment-granular §5.6 invalidation for one mutation event.
+
+        * delete — evict entries whose partition dependency set intersects
+          the touched partitions, plus underfilled entries (fewer than k
+          results means every candidate was returned, so candidate-count
+          changes can reshape them).
+        * insert — evict entries the new vectors could displace: the
+          nearest new vector reaches the entry's kth distance (underfilled
+          entries have an infinite kth and always evict). Over-eviction
+          only — if the new vector's partition wouldn't even be visited,
+          the fresh search returns the same ids the entry held.
+        * compact — drop-only compaction is bitwise-invisible (same codes,
+          same order), nothing evicts; requantization changes the
+          partition's quantized geometry, so entries depending on it, in
+          its threshold radius, or underfilled evict.
+
+        Residual (documented in DESIGN.md §Live index): entries whose query
+        reached k candidates only through §2.5 escalations may survive a
+        delete/requantize that would now escalate differently — the
+        dependency sets cover returned ids, not the visit set.
+        """
+        cache = self.result_cache
+        pid_set = frozenset(ev.pids)
+
+        def underfilled(value) -> bool:
+            ids, _ = value
+            return bool((np.asarray(ids) < 0).any())
+
+        if ev.kind == "delete":
+            cache.invalidate_where(lambda key, value: (
+                underfilled(value)
+                or cache.deps(key) is None
+                or bool(cache.deps(key) & pid_set)))
+        elif ev.kind == "insert":
+            vecs = ev.vectors
+
+            def displaced(key, value) -> bool:
+                if underfilled(value):
+                    return True
+                _, dists = value
+                q = np.frombuffer(key[0], dtype=np.float64)
+                dmin = float(np.sqrt(
+                    ((vecs - q[None, :]) ** 2).sum(axis=1)).min())
+                return dmin <= float(np.asarray(dists)[-1])
+
+            cache.invalidate_where(displaced)
+        elif ev.kind == "compact" and ev.requantize:
+            cent = self.index.partitioning.centroids
+            thr = self.index.partitioning.threshold
+
+            def touches(key, value) -> bool:
+                if underfilled(value):
+                    return True
+                deps = cache.deps(key)
+                if deps is None or (deps & pid_set):
+                    return True
+                q = np.frombuffer(key[0], dtype=np.float64)
+                d = np.sqrt(((cent - q[None, :]) ** 2).sum(axis=1))
+                return any(d[p] <= thr * max(float(d.min()), 1e-12)
+                           for p in pid_set)
+
+            cache.invalidate_where(touches)
+
+    def rebind(self, index) -> None:
+        """Swap this runtime onto a (re)built index without dropping warm
+        container state.
+
+        The container pools survive the swap: their free lists keep the
+        warm containers, while ``invalidate_cache()`` bumps the index
+        version (staling every fetch/derived key) and the pools' epoch — so
+        in-flight leases *drain* through the existing epoch machinery
+        (their releases still return containers to the pool; their derived
+        retains are dropped) instead of the old behavior of discarding the
+        runtime wholesale. Partition-count changes keep the overlapping
+        processor pools' warmth and add/remove the rest.
+        """
+        index = _unwrap_live(index)
+        self.index = index
+        n_new = len(index.parts)
+        if n_new != self.n_qp:
+            pool_kw = dict(warm_prob=self.cfg.warm_prob,
+                           fetch_bandwidth_bps=self.cfg.fetch_bandwidth_bps,
+                           fetch_rtt_s=self.cfg.fetch_rtt_s)
+            for pid in range(self.n_qp, n_new):
+                self.qp_pools[pid] = ContainerPool(
+                    seed=self.cfg.seed + 2 + pid, **pool_kw)
+            for pid in range(n_new, self.n_qp):
+                del self.qp_pools[pid]
+            self.n_qp = n_new
+        self.allocator = nd.QueryAllocator(index)
+        live = getattr(index, "live_owner", None)
+        self._live_cursor = live.version if live is not None else 0
+        self._stacked = None
+        self._processors.clear()
+        self.close()     # real workers hold the old index's bundles
+        self.invalidate_cache()
 
     def qa_data_bytes(self) -> int:
         """QA singleton: attribute Q-index + centroids + P-V map."""
@@ -468,6 +647,7 @@ class ServerlessRuntime:
         k: int = 10,
     ) -> SearchResult:
         """Run one query batch through the full CO → QA → QP choreography."""
+        self._sync_index()      # drain any live-index mutations first
         queries = np.atleast_2d(np.asarray(queries, dtype=np.float64))
         qn = queries.shape[0]
         if qn == 0:
@@ -529,9 +709,16 @@ class _Execution:
             return 0, 0
         return self._qrange(spec.node_id, spec.node_id + 1)
 
-    def _acquire(self, pool: ContainerPool, key, nbytes: int) -> Lease:
+    def _acquire(self, pool: ContainerPool, key, nbytes: int,
+                 merge: bool = True) -> Lease:
+        """Lease a container; with ``merge=False`` the caller folds the
+        lease's per-call stats delta into ``self.dre`` itself — used by the
+        QP path so the delta can first absorb the derived-hit outcome and
+        be merged exactly once (the old flow merged here and then bumped
+        ``derived_hits`` by hand, double-counting against the pool)."""
         lease = pool.acquire(key, nbytes, use_dre=self.cfg.use_dre)
-        self.dre.merge(lease.stats)
+        if merge:
+            self.dre.merge(lease.stats)
         return lease
 
     def _invoke_overhead(self, warm: bool) -> float:
@@ -712,9 +899,14 @@ class _Execution:
                 # Local: the lease models warm/fetch now; the body itself is
                 # submitted at collection, on the handler's *decoded* wire
                 # request, so the codec stays on the hop's real path.
+                # The fetch-level singleton key embeds the index version and
+                # the QA-state generation: after invalidate_cache()/rebind
+                # (or any live-index mutation) a warm container's retained
+                # bytes are stale and the S3 fetch is paid again.
                 lease = self._acquire(
                     self.rt.qa_pool,
-                    (self.cfg.dataset_tag, "qa-index"),
+                    (self.cfg.dataset_tag, "qa-index",
+                     self.rt.index_version, self.rt._qa_generation()),
                     self.rt.qa_data_bytes())
                 warm, hit, fetch_s = lease.warm, lease.dre_hit, lease.fetch_s
             inv = self._invoke_overhead(warm)
@@ -822,10 +1014,19 @@ class _Execution:
                     "ids": np.stack([e[0] for _, e in hit_entries]),
                     "dists": np.stack([e[1] for _, e in hit_entries])})
             if miss_keys:
+                # Dependency sets for segment-granular invalidation: the
+                # home partitions of the returned ids (a result can only
+                # change if one of them — or, for underfilled entries, the
+                # candidate supply — changes; see invalidate_cache).
+                assign = self.rt.index.partitioning.assign
+                n_parts = len(self.rt.index.parts)
                 for gq, ckey in miss_keys.items():
                     row = gather.pos[gq]
-                    cache.put(ckey, (gather.ids[row].copy(),
-                                     gather.dists[row].copy()))
+                    ids_row = gather.ids[row]
+                    deps = np.unique(assign[ids_row[ids_row >= 0]])
+                    cache.put(ckey, (ids_row.copy(),
+                                     gather.dists[row].copy()),
+                              parts=deps[deps < n_parts])
             resp = {"qidx": full_qidx, "ids": gather.ids,
                     "dists": gather.dists}
             rbuf = pl.encode_message(resp)
@@ -945,10 +1146,18 @@ class _Execution:
                         {"sleep_s": cfg.worker_sleep_s}, self._ctx(sid)))
                 warm = pinv.predicted_warm
             else:
+                # Versioned fetch key: index version + per-partition
+                # generation, so invalidation and live mutations stale the
+                # *fetch* retention too (not just derived state — the old
+                # unversioned key let a warm container score a free DRE hit
+                # on stale partition bytes after invalidate_cache()). The
+                # stats delta merges in the handler, after the derived-hit
+                # outcome lands on it.
                 lease = self._acquire(
                     self.rt.qp_pools[pid],
-                    f"{cfg.dataset_tag}/part{pid}",
-                    self.rt.qp_data_bytes(pid))
+                    (cfg.dataset_tag, f"part{pid}",
+                     self.rt.index_version, self.rt._generation(pid)),
+                    self.rt.qp_data_bytes(pid), merge=False)
                 warm = lease.warm
             inv = self._invoke_overhead(warm)
             t_i = t_issue + ci * cfg.invoke_stagger_s
@@ -994,12 +1203,16 @@ class _Execution:
             pool = self.rt.qp_pools[pid]
             setup_s = cfg.qp_setup_s
             if cfg.use_dre:
-                dkey = ("stacked", pid, self.rt.index_version)
+                dkey = ("stacked", pid, self.rt.index_version,
+                        self.rt._generation(pid))
                 if pool.derived_hit(lease, dkey):
                     setup_s = 0.0
-                    self.dre.derived_hits += 1
                 else:
                     pool.retain_derived(lease, dkey)
+            # One merge of the per-call delta (Lease.stats), which now
+            # carries the derived-hit outcome — pool.stats and the run's
+            # DreStats stay consistent by construction.
+            self.dre.merge(lease.stats)
             raw, linfo = self.transport.submit(
                 f"qp:{pid}", request=creq,
                 extra=pl.inject_span_context({}, self._ctx(sid))).result()

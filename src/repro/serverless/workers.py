@@ -74,7 +74,12 @@ class WorkerInit:
 # ------------------------------------------------------------------ bundles
 
 def build_qa_bundle(index) -> Dict:
-    """Picklable state for the allocator function (Stage 1 + Alg. 1)."""
+    """Picklable state for the allocator function (Stage 1 + Alg. 1).
+
+    Carries the live-index tombstone bitmap (None for a frozen index) so a
+    worker-side QA masks dead rows in Stage 1 exactly like the in-process
+    pipeline.
+    """
     return {
         "config": index.config,
         "partitioning": index.partitioning,
@@ -82,21 +87,30 @@ def build_qa_bundle(index) -> Dict:
         "part_sizes": [pt.size for pt in index.parts],
         "profile": getattr(index, "profile", None),
         "dim": index.dim,
+        "live_mask": getattr(index, "live_mask", None),
     }
 
 
 def build_qp_bundle(index, pid: int, dtype) -> Dict:
-    """Picklable state for one processor function: its partition slab only."""
+    """Picklable state for one processor function: its partition slab only.
+
+    Live-index tombstones fold into the slab's ``valid`` bits, so a worker
+    QP's Stage 3 drops dead rows even when a request names them.
+    """
     from repro.core import dataplane
 
     n_max = max(pt.size for pt in index.parts)
     m1 = max(pt.quant.boundaries.shape[0] for pt in index.parts)
+    live_mask = getattr(index, "live_mask", None)
+    pt = index.parts[pid]
+    live_rows = None if live_mask is None else live_mask[pt.vector_ids]
     return {
         "config": index.config,
         "profile": getattr(index, "profile", None),
         "pid": pid,
         "part_arrays": dataplane.part_stack_arrays(
-            index.parts[pid], n_max=n_max, m1=m1, d=index.dim, dtype=dtype),
+            pt, n_max=n_max, m1=m1, d=index.dim, dtype=dtype,
+            live_rows=live_rows),
         "dim": index.dim,
     }
 
@@ -118,6 +132,7 @@ class _QAIndexView:
         self.parts = [_SizeOnlyPart(s) for s in bundle["part_sizes"]]
         self.profile = bundle["profile"]
         self.dim = bundle["dim"]
+        self.live_mask = bundle.get("live_mask")
 
 
 # ----------------------------------------------------- role compute (shared)

@@ -61,6 +61,10 @@ def pytest_configure(config):
         "markers",
         "transport: spawns ProcessTransport worker processes (run in CI "
         "under a hard timeout; deselect with -m 'not transport')")
+    config.addinivalue_line(
+        "markers",
+        "mutation: live-index mutation regression tier (insert/delete/"
+        "compact parity and stale-retention guards; select with -m mutation)")
 
 
 _AUTO_MARKS = {
@@ -70,6 +74,7 @@ _AUTO_MARKS = {
     "test_archs": ("slow",),
     "test_transport": ("transport",),
     "test_obs_transport": ("transport",),
+    "test_live": ("mutation",),
 }
 
 
