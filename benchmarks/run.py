@@ -163,17 +163,30 @@ def smoke() -> int:
     # transports, while persisting one JSONL trace record per transport —
     # CO/QA/QP spans stitched parent→child, worker-side sub-spans from both
     # real substrates — and a metrics registry that yields latency
-    # quantiles. The trace file is uploaded as a CI artifact.
+    # quantiles. Fleet telemetry (PR 10) rides the same pass: pipe workers
+    # and socket hosts must surface in ``fleet_snapshot()`` under pid/host
+    # labels with worker-side counters the client-local registry never
+    # sees, the rolling SLO gate must pass over the exported records, and
+    # every record's per-node dollar attribution must sum back to its §3.5
+    # cost total. The trace file and the merged metrics snapshot are
+    # uploaded as CI artifacts.
+    import json as _json
+    import math as _math
+
     from repro.obs.metrics import REGISTRY as obs_registry
     from repro.obs.export import read_jsonl
+    from repro.obs.slo import SloTracker, default_policy
 
     trace_path = os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         "results", "SMOKE_trace.jsonl")
+    metrics_path = os.path.join(os.path.dirname(trace_path),
+                                "SMOKE_metrics.json")
     if os.path.exists(trace_path):
         os.remove(trace_path)
     obs_registry.reset()
     try:
+        fleet = {}
         for transport in ("local", "process", "socket"):
             rt_o = ServerlessRuntime(idx, RuntimeConfig(
                 branching=2, max_level=1, transport=transport, qa_workers=1,
@@ -185,8 +198,36 @@ def smoke() -> int:
                     f"{transport}: obs-enabled ids diverged")
                 assert res_o.stats == stats_j, (
                     f"{transport}: obs-enabled stats drift")
+                fleet[transport] = obs_registry.fleet_snapshot()
             finally:
                 rt_o.close()
+        # Fleet-aggregation gate. The registry accumulates across the loop:
+        # after the local pass there must be no remote sources; the process
+        # pass must add pid-labelled pipe workers; the socket pass must add
+        # host:port/pid-labelled hosts — each carrying worker.* instruments
+        # that exist in the merged view but never client-locally.
+        assert not fleet["local"]["remote"], (
+            f"local transport leaked remote sources: "
+            f"{sorted(fleet['local']['remote'])}")
+        pid_src = [s for s in fleet["process"]["remote"]
+                   if s.startswith("pid:")]
+        assert pid_src, "pipe workers missing from fleet_snapshot()"
+        host_src = [s for s in fleet["socket"]["remote"]
+                    if "/pid:" in s and ":" in s.split("/", 1)[0]]
+        assert host_src, (
+            f"socket hosts missing from fleet_snapshot(): "
+            f"{sorted(fleet['socket']['remote'])}")
+        for label, sources in (("pipe", pid_src), ("host", host_src)):
+            served = sum(
+                fleet["socket"]["remote"][s]["counters"].get(
+                    "worker.requests", 0) for s in sources)
+            assert served > 0, f"{label} workers reported no requests"
+        merged_c = fleet["socket"]["merged"]["counters"]
+        local_c = fleet["socket"]["local"]["counters"]
+        assert merged_c.get("worker.requests", 0) > 0
+        assert "worker.requests" not in local_c, (
+            "worker-side counters must not exist client-locally")
+        assert "worker.handle_s" in fleet["socket"]["merged"]["histograms"]
         records = read_jsonl(trace_path)
         assert len(records) == 3, f"expected 3 trace records, got {len(records)}"
         by_transport = {r["meta"]["transport"]: r for r in records}
@@ -207,6 +248,31 @@ def smoke() -> int:
         h = snap["histograms"]["transport.process.invoke_s"]
         assert h["p50"] is not None and h["p99"] is not None
         obs_p50, obs_p99 = h["p50"], h["p99"]
+        # Rolling-SLO gate: the monitors must evaluate p50/p99 (and the
+        # retry/error budgets) from the live record stream, conclusively,
+        # and the permissive default policy must pass a healthy smoke run.
+        slo_tracker = SloTracker.from_records(records)
+        slo_report = default_policy().evaluate(slo_tracker)
+        assert slo_report.conclusive, (
+            f"SLO monitors missing data: {slo_report.summary()}")
+        assert slo_report.ok, f"SLO gate failed: {slo_report.summary()}"
+        # Cost-attribution gate: per-node dollars must sum back to each
+        # run's Eqs. 3–8 total (exact by construction, checked to float
+        # noise), and every exported record must carry a fleet snapshot.
+        for r in records:
+            rows = r["run_trace"]["dollars_attributed"]
+            total = r["run_trace"]["cost"]["total"]
+            attributed = _math.fsum(x["total"] for x in rows)
+            assert rows and abs(attributed - total) <= 1e-9 * total, (
+                f"{r['meta']['transport']}: attributed ${attributed} != "
+                f"run total ${total}")
+            assert r.get("metrics") is not None, (
+                f"{r['meta']['transport']}: record missing fleet metrics")
+        with open(metrics_path, "w") as f:
+            _json.dump({"fleet": obs_registry.fleet_snapshot(),
+                        "slo": slo_report.to_json(),
+                        "slo_monitors": slo_tracker.snapshot()},
+                       f, indent=2, default=float)
     finally:
         obs_registry.disable()
         obs_registry.reset()
@@ -284,6 +350,10 @@ def smoke() -> int:
           f"{tuned_recall:.3f} at {st_tn.adc_evals}/{static_adc} ADC evals; "
           f"obs: 3-transport trace at {os.path.relpath(trace_path)}, "
           f"process invoke p50={obs_p50 * 1e3:.1f}ms p99={obs_p99 * 1e3:.1f}ms"
+          f"; fleet: {len(pid_src)} pipe + {len(host_src)} host source(s) "
+          f"aggregated, SLO gate PASS "
+          f"(p99={slo_tracker.snapshot()['latency_p99_s']:.2f}s), "
+          f"metrics snapshot at {os.path.relpath(metrics_path)}"
           f"; live-index mutation gate: search during ≡ after compaction, "
           f"{live.live_count()} live rows")
     return 0
@@ -326,11 +396,20 @@ def main(argv=None) -> int:
     only = set(args.only.split(",")) if args.only else None
     failures = []
     t_start = time.time()
+    results_dir = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                               "..", "results")
     for name, mod in suite.items():
         if only and name not in only:
             continue
         try:
             mod.run(quick=quick)
+            # Persistence guarantee: every bench must leave its paper
+            # artifact behind — a bench that runs green but writes nothing
+            # breaks the trajectory (plots/CI consume these files).
+            artifact = os.path.join(results_dir, f"BENCH_{name}.json")
+            if not os.path.exists(artifact):
+                raise FileNotFoundError(
+                    f"bench ran but wrote no {os.path.basename(artifact)}")
         except Exception as e:
             print(f"[bench:{name}] FAILED: {type(e).__name__}: {e}")
             failures.append(name)

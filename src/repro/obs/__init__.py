@@ -15,6 +15,17 @@
   exporter for tests.
 * ``timeline`` — ``python -m repro.obs.timeline <trace.jsonl>``: a per-node
   text Gantt of the Alg. 2 tree walk.
+* ``slo``      — rolling p50/p99 latency, retry/error-budget and
+  cache-hit monitors over the run-record stream, with the
+  :class:`~repro.obs.slo.SloPolicy` gate API (PR 10).
+* ``top``      — ``python -m repro.obs.top <trace.jsonl>``: live text
+  dashboard of fleet metrics, SLO status and $/query attribution.
+
+Fleet aggregation (PR 10): ``Counter``/``Gauge``/``Histogram`` merge
+losslessly from snapshots; pipe workers echo registry deltas in response
+``info`` and socket hosts answer a STATS frame, so
+``REGISTRY.fleet_snapshot()`` is one merged, source-labelled view of the
+whole fleet.
 
 The whole layer is opt-in via ``RuntimeConfig(obs_enabled=True,
 obs_trace_path=...)``; ids, ``SearchStats`` and all traces are
@@ -25,10 +36,12 @@ freely without cycles.
 
 from repro.obs.export import InMemoryExporter, JsonlExporter, read_jsonl, run_record
 from repro.obs.metrics import REGISTRY, Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.slo import SloObjective, SloPolicy, SloTracker, default_policy
 from repro.obs.spans import Recorder, Span, SpanContext, new_run_id
 
 __all__ = [
     "REGISTRY", "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "Recorder", "Span", "SpanContext", "new_run_id",
     "InMemoryExporter", "JsonlExporter", "read_jsonl", "run_record",
+    "SloObjective", "SloPolicy", "SloTracker", "default_policy",
 ]

@@ -3,7 +3,9 @@
 One *run record* per completed ``ServerlessRuntime.search``::
 
     {"run": <run id>, "meta": {transport, queries, k, makespan_s, ...},
-     "spans": [Span.to_json(), ...], "run_trace": RunTrace.to_json()}
+     "spans": [Span.to_json(), ...], "run_trace": RunTrace.to_json(),
+     "metrics": REGISTRY.fleet_snapshot(),   # when fleet telemetry is live
+     "slo": SloTracker.snapshot()}           # rolling monitors at export
 
 ``JsonlExporter`` appends one record per line (append-mode per write, so
 several runtimes — or several smoke gates — can share one artifact file);
@@ -21,8 +23,15 @@ from typing import Dict, List, Optional
 __all__ = ["InMemoryExporter", "JsonlExporter", "run_record", "read_jsonl"]
 
 
-def run_record(recorder, run_trace=None, meta: Optional[Dict] = None) -> Dict:
-    """Assemble one exportable record from a finished run's recorder."""
+def run_record(recorder, run_trace=None, meta: Optional[Dict] = None,
+               metrics: Optional[Dict] = None,
+               slo: Optional[Dict] = None) -> Dict:
+    """Assemble one exportable record from a finished run's recorder.
+
+    ``metrics`` is the fleet snapshot (local/remote/merged registries) at
+    export time; ``slo`` the rolling-monitor dump. Both are optional so
+    pre-telemetry records stay valid and readers treat them as absent.
+    """
     rec: Dict = {
         "run": recorder.run_id,
         "meta": dict(meta or {}),
@@ -30,6 +39,10 @@ def run_record(recorder, run_trace=None, meta: Optional[Dict] = None) -> Dict:
     }
     if run_trace is not None:
         rec["run_trace"] = run_trace.to_json()
+    if metrics is not None:
+        rec["metrics"] = metrics
+    if slo is not None:
+        rec["slo"] = slo
     return rec
 
 

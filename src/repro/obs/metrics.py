@@ -17,6 +17,20 @@ uniformly, which the tests pin. ``snapshot()`` serializes everything
 
 Metric name convention: dotted, ``<subsystem>.<object>.<event>`` —
 see DESIGN.md §4 for the full table the runtime emits.
+
+**Fleet aggregation** (PR 10): every metric merges *losslessly* from a
+snapshot — counters add, gauges sum, histograms add per-bucket tallies (the
+fixed bounds are the reason merge loses nothing; quantiles recompute from
+the merged buckets). ``REGISTRY.absorb_snapshot(snap, source=...)`` folds a
+remote process's snapshot (a pipe worker's response-info delta, or a socket
+host's STATS reply) into a per-source store, and ``fleet_snapshot()``
+returns the three-level view::
+
+    {"local": <this process>, "remote": {"host:port/pid:N": snap, ...},
+     "merged": <local + every remote, quantiles recomputed>}
+
+so worker-only metrics (``worker.*``, a remote host's jit compiles) appear
+in the merged view host/pid-labelled while staying absent from ``local``.
 """
 
 from __future__ import annotations
@@ -27,6 +41,7 @@ from typing import Dict, Optional, Sequence, Tuple
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "REGISTRY",
     "DEFAULT_LATENCY_BUCKETS", "DEFAULT_BYTES_BUCKETS",
+    "bounds_from_buckets", "snapshot_delta",
 ]
 
 
@@ -61,6 +76,9 @@ class _NullMetric:
     def observe(self, value: float) -> None:
         pass
 
+    def merge(self, snapshot) -> None:
+        pass
+
     def quantile(self, q: float) -> float:
         return 0.0
 
@@ -80,6 +98,54 @@ class _NullMetric:
 _NULL = _NullMetric()
 
 
+def bounds_from_buckets(buckets: Dict[str, int]) -> Tuple[float, ...]:
+    """Recover a histogram's finite bounds from a snapshot's bucket keys.
+
+    Bucket keys are ``repr(bound)`` strings (plus ``"+inf"``), and
+    ``float(repr(x)) == x`` for every finite float, so the round-trip is
+    exact — a merged histogram rebuilt from a snapshot has bitwise-identical
+    bounds to the one that produced it.
+    """
+    return tuple(sorted(float(k) for k in buckets if k != "+inf"))
+
+
+def snapshot_delta(cur: Dict, prev: Optional[Dict]) -> Dict:
+    """Lossless difference of two cumulative registry snapshots.
+
+    ``cur - prev`` per metric: counters subtract, histogram count/sum and
+    per-bucket tallies subtract, gauges pass through at their current value
+    (a gauge is instantaneous — the "delta" of a last-write-wins value is
+    the value). Metrics absent from ``prev`` pass through whole. This is
+    what a pipe worker echoes in its response info: each echo carries only
+    what happened since the previous one, so the client can absorb every
+    response without double counting.
+    """
+    if not prev:
+        return cur
+    out: Dict = {"counters": {}, "gauges": dict(cur.get("gauges", {})),
+                 "histograms": {}}
+    pc = prev.get("counters", {})
+    for name, v in cur.get("counters", {}).items():
+        d = v - pc.get(name, 0)
+        if d:
+            out["counters"][name] = d
+    ph = prev.get("histograms", {})
+    for name, h in cur.get("histograms", {}).items():
+        p = ph.get(name)
+        if p is None:
+            out["histograms"][name] = h
+            continue
+        dcount = h["count"] - p["count"]
+        if dcount <= 0:
+            continue
+        pb = p.get("buckets", {})
+        buckets = {k: c - pb.get(k, 0) for k, c in h["buckets"].items()}
+        dh = {"count": dcount, "sum": h["sum"] - p["sum"],
+              "buckets": buckets}
+        out["histograms"][name] = dh
+    return out
+
+
 class Counter:
     """Monotonically increasing event count."""
 
@@ -91,6 +157,11 @@ class Counter:
     def inc(self, n: int = 1) -> None:
         with self._lock:
             self._value += n
+
+    def merge(self, snapshot_value: int) -> None:
+        """Fold a remote counter's snapshot value in (lossless: counts add)."""
+        with self._lock:
+            self._value += int(snapshot_value)
 
     @property
     def value(self) -> int:
@@ -118,6 +189,13 @@ class Gauge:
     def inc(self, n: float = 1) -> None:
         with self._lock:
             self._value += n
+
+    def merge(self, snapshot_value: float) -> None:
+        """Fold a remote gauge in. Fleet semantics are *additive*: a gauge
+        like pool occupancy or inflight count sums across processes into
+        the fleet total (last-write-wins only applies within one process)."""
+        with self._lock:
+            self._value += float(snapshot_value)
 
     @property
     def value(self) -> float:
@@ -168,6 +246,37 @@ class Histogram:
         with self._lock:
             return self._sum
 
+    def merge(self, snapshot: Dict) -> None:
+        """Fold a remote histogram snapshot in — lossless by construction.
+
+        ``snapshot`` is one ``snapshot()`` histogram entry (``count``,
+        ``sum``, ``buckets``). Fixed bounds make the merge exact: per-bucket
+        tallies (including ``+inf`` overflow) and the count/sum moments add,
+        and quantiles recomputed from the merged buckets are identical to a
+        single histogram that observed both streams. Bounds must match —
+        a remote histogram with different bounds cannot merge losslessly,
+        so that raises instead of silently re-binning.
+        """
+        buckets = snapshot["buckets"]
+        if bounds_from_buckets(buckets) != self.bounds:
+            raise ValueError(
+                f"histogram {self.name!r}: snapshot bounds do not match "
+                "(lossless merge requires identical buckets)")
+        add = [buckets[repr(b)] for b in self.bounds]
+        add.append(buckets.get("+inf", 0))
+        with self._lock:
+            for i, c in enumerate(add):
+                self._counts[i] += int(c)
+            self._sum += float(snapshot["sum"])
+            self._count += int(snapshot["count"])
+
+    def snapshot(self) -> Dict:
+        """One registry-snapshot histogram entry — the unit :meth:`merge`
+        consumes, so ``a.merge(b.snapshot())`` works on bare histograms."""
+        return {"count": self.count, "sum": self.sum,
+                "p50": self.quantile(0.50), "p95": self.quantile(0.95),
+                "p99": self.quantile(0.99), "buckets": self.bucket_counts()}
+
     def bucket_counts(self) -> Dict[str, int]:
         # Snapshot under the lock: reading _counts while observe() mutates
         # it could pair a bucket tally with a +inf tally from a different
@@ -207,6 +316,9 @@ class MetricsRegistry:
         self._counters: Dict[str, Counter] = {}      # guarded-by: _lock
         self._gauges: Dict[str, Gauge] = {}          # guarded-by: _lock
         self._histograms: Dict[str, Histogram] = {}  # guarded-by: _lock
+        # Per-source remote aggregates (fleet telemetry): one sub-registry
+        # per "host:port/pid:N" label, fed by absorb_snapshot.
+        self._remote: Dict[str, "MetricsRegistry"] = {}  # guarded-by: _lock
 
     # ------------------------------------------------------------- switches
 
@@ -221,11 +333,12 @@ class MetricsRegistry:
         self._enabled = False
 
     def reset(self) -> None:
-        """Drop every metric (tests isolate runs with this)."""
+        """Drop every metric, local and absorbed-remote (test isolation)."""
         with self._lock:
             self._counters.clear()
             self._gauges.clear()
             self._histograms.clear()
+            self._remote.clear()
 
     # ------------------------------------------------------------ accessors
 
@@ -258,6 +371,79 @@ class MetricsRegistry:
                 h = self._histograms.setdefault(
                     name, Histogram(name, buckets or DEFAULT_LATENCY_BUCKETS))
         return h
+
+    # ------------------------------------------------- fleet aggregation
+
+    def merge_snapshot(self, snap: Dict, *, gauge_set: bool = False) -> None:
+        """Fold one registry snapshot into *this* registry's metrics.
+
+        Lossless per metric kind (see the individual ``merge`` docs);
+        metrics the snapshot names that don't exist here yet are created —
+        histograms with the bounds recovered from the snapshot's bucket
+        keys, so the merge target never re-bins. ``gauge_set=True`` makes
+        gauges last-write-wins instead of additive — used when absorbing
+        repeated reports *from one source*, where each report carries the
+        gauge's current value (adding them would inflate the aggregate).
+        """
+        if not self._enabled:
+            return
+        for name, v in (snap.get("counters") or {}).items():
+            self.counter(name).merge(v)
+        for name, v in (snap.get("gauges") or {}).items():
+            g = self.gauge(name)
+            g.set(v) if gauge_set else g.merge(v)
+        for name, h in (snap.get("histograms") or {}).items():
+            self.histogram(
+                name, buckets=bounds_from_buckets(h["buckets"])).merge(h)
+
+    def absorb_snapshot(self, snap: Dict, *, source: str,
+                        replace: bool = False) -> None:
+        """Fold a remote process's snapshot into the per-``source`` store.
+
+        ``source`` labels where the numbers came from (``"pid:1234"`` for a
+        pipe worker, ``"host:port/pid:N"`` for a socket host). With
+        ``replace=False`` the snapshot is a *delta* (a pipe worker's
+        response-info echo) and accumulates into the source's aggregate;
+        with ``replace=True`` it is *cumulative* (a socket host's STATS
+        reply — the host registry already holds the totals) and supersedes
+        whatever this source reported before, so repeated pulls never
+        double-count. No-op while disabled — absorbing telemetry is part of
+        the obs layer's zero-cost-when-off contract.
+        """
+        if not self._enabled or not snap:
+            return
+        with self._lock:
+            sub = self._remote.get(source)
+            if sub is None or replace:
+                sub = MetricsRegistry(enabled=True)
+                self._remote[source] = sub
+        sub.merge_snapshot(snap, gauge_set=True)
+
+    def remote_sources(self) -> Tuple[str, ...]:
+        """Labels of every absorbed remote source (sorted)."""
+        with self._lock:
+            return tuple(sorted(self._remote))
+
+    def fleet_snapshot(self) -> Dict:
+        """The merged, host/pid-labelled fleet view.
+
+        ``local`` is this process's ``snapshot()``; ``remote`` maps each
+        absorbed source label to its aggregate snapshot; ``merged`` folds
+        local + every remote into one fresh registry and snapshots it — so
+        merged histogram quantiles are recomputed from the *combined*
+        buckets, not averaged from per-source quantiles.
+        """
+        local = self.snapshot()
+        with self._lock:
+            remote = dict(self._remote)
+        remote_snaps = {src: sub.snapshot()
+                        for src, sub in sorted(remote.items())}
+        merged = MetricsRegistry(enabled=True)
+        merged.merge_snapshot(local)
+        for snap in remote_snaps.values():
+            merged.merge_snapshot(snap)
+        return {"local": local, "remote": remote_snaps,
+                "merged": merged.snapshot()}
 
     # ------------------------------------------------------------- snapshot
 

@@ -10,6 +10,15 @@ phase split, and the worker-reported wall-clock sub-spans (deserialize /
 compute / serialize / fetch) indented beneath the node that shipped them
 back. Wall-clock sub-spans are durations, not bars — they live on the
 worker's clock, which the modeled axis does not share.
+
+Records with no stitched node spans (a trace exported with span recording
+off, or a worker echo that failed verification) degrade gracefully: the
+rows are synthesized from the ``run_trace`` node traces instead — same
+bars, with the invoke/fetch/compute phase split coming from the modeled
+timeline rather than recorded phase spans.
+
+``--metrics`` additionally prints each record's merged fleet-metrics
+summary (counters + histogram quantiles) beneath its Gantt.
 """
 
 from __future__ import annotations
@@ -39,6 +48,31 @@ def _bar(t0: float, t1: float, tmax: float, width: int) -> str:
     return "·" * lo + "█" * (hi - lo) + "·" * (width - hi)
 
 
+def _trace_rows(record: Dict, width: int, tmax: float,
+                lines: List[str]) -> None:
+    """Fallback rows from ``run_trace`` nodes when no node spans exist."""
+    nodes = (record.get("run_trace") or {}).get("nodes") or ()
+    tmax = max(tmax, max((float(n["t_end"]) for n in nodes), default=0.0))
+    for n in sorted(nodes, key=lambda d: (d["t_issue"], d["node"],
+                                          d.get("chunk", 0))):
+        marker = "W" if n.get("warm") else "C"
+        retries = int(n.get("retries", 0))
+        if retries:
+            marker += f" r{retries}!"
+        t0, t1 = float(n["t_issue"]), float(n["t_end"])
+        label = f"{n['node']}#{n.get('chunk', 0)}"
+        lines.append(f"  {label:<10s} [{marker:<4s}] "
+                     f"|{_bar(t0, t1, tmax, width)}| "
+                     f"{_fmt_s(t0)}–{_fmt_s(t1)}")
+        phases = [("invoke", n.get("invoke_s", 0.0)),
+                  ("fetch", n.get("fetch_s", 0.0)),
+                  ("setup", n.get("setup_s", 0.0)),
+                  ("compute", n.get("compute_s", 0.0))]
+        lines.append("      " + " · ".join(
+            f"{name} {_fmt_s(float(dur))}"
+            for name, dur in phases if dur) + "  (modeled)")
+
+
 def render_record(record: Dict, width: int = 56) -> str:
     spans = [Span.from_json(d) for d in record.get("spans", ())]
     meta = record.get("meta", {})
@@ -55,6 +89,9 @@ def render_record(record: Dict, width: int = 56) -> str:
              f"modeled={_fmt_s(float(meta.get('makespan_s', tmax)))}"
              + (f"  measured={_fmt_s(float(meta['measured_makespan_s']))}"
                 if meta.get("measured_makespan_s") else "")]
+    if not nodes:
+        _trace_rows(record, width, tmax, lines)
+        return "\n".join(lines)
     for node in nodes:
         marker = "W" if node.attrs.get("warm") else "C"
         retries = int(node.attrs.get("retries", 0))
@@ -85,9 +122,17 @@ def render_record(record: Dict, width: int = 56) -> str:
 
 
 def render_records(records: List[Dict], width: int = 56,
-                   run: Optional[str] = None) -> str:
+                   run: Optional[str] = None,
+                   metrics: bool = False) -> str:
     picked = [r for r in records if run is None or r.get("run") == run]
-    return "\n\n".join(render_record(r, width=width) for r in picked)
+    parts = []
+    for r in picked:
+        text = render_record(r, width=width)
+        if metrics and r.get("metrics"):
+            from repro.obs.top import render_metrics
+            text += "\nfleet metrics:\n" + render_metrics(r["metrics"])
+        parts.append(text)
+    return "\n\n".join(parts)
 
 
 def main(argv=None) -> int:
@@ -99,9 +144,13 @@ def main(argv=None) -> int:
                     help="bar width in characters")
     ap.add_argument("--run", default=None, metavar="ID",
                     help="render only this run id")
+    ap.add_argument("--metrics", action="store_true",
+                    help="also print each record's merged fleet-metrics "
+                         "summary")
     args = ap.parse_args(argv)
     records = read_jsonl(args.trace)
-    out = render_records(records, width=args.width, run=args.run)
+    out = render_records(records, width=args.width, run=args.run,
+                         metrics=args.metrics)
     print(out if out else f"(no matching runs in {args.trace})")
     return 0
 

@@ -17,7 +17,8 @@ Per connection, two threads split the work so the hang guard stays honest:
 * the **receiver** thread owns the socket's read side. It answers PING
   frames with PONG *immediately* — even while a request is executing — so
   the client can tell "worker busy computing" (PONGs keep flowing) from
-  "link dead" (silence);
+  "link dead" (silence); it answers STATS frames the same way, with the
+  host process's cumulative metrics-registry snapshot (fleet telemetry);
 * the **compute** thread drains a local queue of decoded requests, runs
   :meth:`RequestServer.handle`, and writes RESP frames back. Oversized
   responses paginate into budget-sized pages (``seq``/``nseq``) rather than
@@ -31,6 +32,7 @@ process — can scrape the port and pass ``host:port`` to the client.
 from __future__ import annotations
 
 import argparse
+import os
 import queue
 import socket
 import threading
@@ -105,6 +107,17 @@ def _serve_connection(conn: socket.socket) -> None:
             elif kind == pl.FRAME_PING:
                 with send_lock:
                     pl.write_frame(conn, pl.FRAME_PONG)
+            elif kind == pl.FRAME_STATS:
+                # Fleet-telemetry pull: dump this process's cumulative
+                # registry (every RequestServer in this host shares it).
+                # Answered from the receiver thread like PONG, so a busy
+                # compute thread never delays the fleet snapshot.
+                body = pl.encode_message({
+                    "os_pid": os.getpid(),
+                    "snapshot": _METRICS.snapshot(),
+                })
+                with send_lock:
+                    pl.write_frame(conn, pl.FRAME_STATS, body)
             elif kind == pl.FRAME_REQ:
                 msg = pl.decode_message(body)
                 jobs.put((int(msg["rid"]), msg["payload"].tobytes(),

@@ -42,7 +42,7 @@ __all__ = [
     "predicates_to_json", "predicates_from_json",
     "OBS_EXTRA_KEY", "inject_span_context", "extract_span_context",
     "FRAME_INIT", "FRAME_REQ", "FRAME_RESP", "FRAME_PING", "FRAME_PONG",
-    "FRAME_SHUTDOWN", "write_frame", "read_frame",
+    "FRAME_SHUTDOWN", "FRAME_STATS", "write_frame", "read_frame",
     "encode_init", "decode_init",
 ]
 
@@ -208,6 +208,13 @@ FRAME_RESP = b"R"       # one invocation response page (codec body; budgeted)
 FRAME_PING = b"P"       # client liveness probe (hang guard)
 FRAME_PONG = b"O"       # host heartbeat / deploy-ack / ping answer
 FRAME_SHUTDOWN = b"X"   # close this worker connection cleanly
+# Fleet-telemetry pull (PR 10): the client sends an empty-body STATS frame;
+# the host's receiver thread answers with a STATS frame whose body is
+# ``encode_message({"os_pid": ..., "snapshot": <registry snapshot>})`` — the
+# host process's *cumulative* metrics registry dump. Telemetry is control
+# plane, like PING/PONG: it never rides the budgeted invocation payload, so
+# request-byte accounting is identical with aggregation on or off.
+FRAME_STATS = b"S"      # metrics-registry pull (request and reply)
 
 _FRAME_HEADER = struct.Struct("<cI")
 

@@ -282,6 +282,7 @@ class ServerlessRuntime:
         self._trace_counter = [0]
         self._transport: Optional[tp.Transport] = None
         self._obs_exporter = None
+        self._slo_tracker = None
         if self.cfg.obs_enabled:
             _METRICS.enable()
 
@@ -297,6 +298,19 @@ class ServerlessRuntime:
                 JsonlExporter(self.cfg.obs_trace_path)
                 if self.cfg.obs_trace_path else InMemoryExporter())
         return self._obs_exporter
+
+    @property
+    def slo_tracker(self):
+        """Rolling SLO monitors fed by every obs-enabled search (one
+        tracker per runtime, so it watches one transport's latency
+        profile). None when observability is off; gate it with any
+        :class:`repro.obs.slo.SloPolicy`."""
+        if not self.cfg.obs_enabled:
+            return None
+        if self._slo_tracker is None:
+            from repro.obs.slo import SloTracker
+            self._slo_tracker = SloTracker()
+        return self._slo_tracker
 
     # ------------------------------------------------------------- transport
 
@@ -835,6 +849,17 @@ class _Execution:
             self.rec.record("search", 0.0, makespan, span_id=root_sid,
                             transport=self.cfg.transport, queries=self.qn,
                             k=self.k)
+            # Fleet telemetry: pull remote registries (socket hosts answer
+            # STATS; pipe-worker deltas were absorbed per response) so the
+            # exported record carries the merged, source-labelled view, and
+            # feed the rolling SLO monitors with this run.
+            fleet_metrics = None
+            if _METRICS.enabled:
+                self.transport.collect_metrics()
+                fleet_metrics = _METRICS.fleet_snapshot()
+            tracker = self.rt.slo_tracker
+            if tracker is not None:
+                tracker.observe_run(trace)
             exporter = self.rt.obs_exporter
             if exporter is not None:
                 exporter.export(run_record(
@@ -842,7 +867,9 @@ class _Execution:
                     meta={"transport": self.cfg.transport,
                           "queries": self.qn, "k": self.k,
                           "makespan_s": makespan,
-                          "measured_makespan_s": measured}))
+                          "measured_makespan_s": measured},
+                    metrics=fleet_metrics,
+                    slo=None if tracker is None else tracker.snapshot()))
         return SearchResult(ids=self.out_ids, dists=self.out_dists,
                             stats=self.stats, trace=trace)
 
@@ -1251,6 +1278,7 @@ class _Execution:
             hamming_in=counters["hamming_in"],
             hamming_kept=counters["hamming_kept"],
             adc_evals=counters["adc_evals"],
+            refined=counters["refined"],
             **wallkw))
         self._record_node_span(
             sid, parent_sid, f"qp:{pid}", "qp", ci, t_issue, t_start,

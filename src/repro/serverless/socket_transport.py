@@ -131,6 +131,8 @@ class _Link:
         self.up = threading.Event()  # connection established + deploy-acked
         self.last_seen = time.perf_counter()   # last frame received
         self.pages: Dict[int, List[Optional[bytes]]] = {}  # guarded-by: _lock
+        self.stats_event = threading.Event()   # a STATS reply landed
+        self.stats_reply: Optional[Dict] = None  # last decoded STATS body
 
     @property
     def inflight(self) -> int:  # squash: holds[_lock]
@@ -341,6 +343,10 @@ class SocketTransport(tr.Transport):
                         "transport.socket.frame_bytes",
                         buckets=DEFAULT_BYTES_BUCKETS).observe(len(body))
                     self._on_response(link, body)
+                elif kind == pl.FRAME_STATS:
+                    # Fleet-telemetry reply: stash for collect_metrics().
+                    link.stats_reply = pl.decode_message(body)
+                    link.stats_event.set()
                 # PONG (and anything else) only refreshes liveness
         except (OSError, ConnectionError, ValueError):
             self._on_link_failure(link, gen)
@@ -489,6 +495,54 @@ class SocketTransport(tr.Transport):
                 if p.worker is not None:
                     p.worker.assigned -= 1
             self._pending.pop(p.rid, None)
+
+    # ---------------------------------------------------------- fleet telemetry
+
+    def collect_metrics(self, timeout_s: float = 5.0) -> Dict[str, Dict]:
+        """Pull every host process's metrics registry into the local one.
+
+        Sends one STATS frame per distinct host address (every link to one
+        ``host:port`` is served by the same host process, whose registry is
+        process-global — one pull covers them all), waits for the receiver
+        thread's reply, and absorbs each snapshot into
+        ``REGISTRY`` under a ``"host:port/pid:N"`` source label with
+        ``replace=True`` — host snapshots are cumulative, so repeated pulls
+        supersede rather than double-count. Returns ``{source: snapshot}``
+        for the hosts that answered in time; an empty dict when the
+        registry is disabled (telemetry stays zero-cost when obs is off —
+        no frame ever hits the wire).
+        """
+        if not _METRICS.enabled:
+            return {}
+        with self._lock:
+            links = [link for links in self._links.values() for link in links
+                     if not link.dead and link.up.is_set()]
+        by_host: Dict[str, _Link] = {}
+        for link in links:
+            by_host.setdefault(link.host, link)
+        out: Dict[str, Dict] = {}
+        for link in by_host.values():
+            sock = link.sock
+            if sock is None:
+                continue
+            link.stats_event.clear()
+            try:
+                with link.send_lock:
+                    pl.write_frame(sock, pl.FRAME_STATS)
+            except (OSError, ConnectionError):
+                _METRICS.counter("transport.socket.stats_failures").inc()
+                continue
+            if not link.stats_event.wait(timeout_s):
+                _METRICS.counter("transport.socket.stats_failures").inc()
+                continue
+            reply = link.stats_reply
+            if not reply:
+                continue
+            source = f"{link.host}/pid:{int(reply['os_pid'])}"
+            _METRICS.absorb_snapshot(reply["snapshot"], source=source,
+                                     replace=True)
+            out[source] = reply["snapshot"]
+        return out
 
     # --------------------------------------------------------------- lifecycle
 

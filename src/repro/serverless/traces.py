@@ -11,6 +11,7 @@ breakdown.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional
 
 from repro.core.cost_model import (LambdaFleet, PricingConstants,
@@ -18,7 +19,7 @@ from repro.core.cost_model import (LambdaFleet, PricingConstants,
 from repro.core.dre import DreStats
 from repro.core.pipeline import SearchStats
 
-__all__ = ["NodeTrace", "RunTrace", "assemble_run_trace"]
+__all__ = ["NodeTrace", "RunTrace", "assemble_run_trace", "attribute_cost"]
 
 
 def _from_fields(cls, data: Dict):
@@ -71,6 +72,7 @@ class NodeTrace:
     hamming_in: int = 0
     hamming_kept: int = 0
     adc_evals: int = 0
+    refined: int = 0          # stage-5 full-precision rows this node read
 
     @property
     def billed_s(self) -> float:
@@ -106,6 +108,11 @@ class RunTrace:
     transport: str = "local"  # which Transport backend executed the run
     measured_makespan_s: float = 0.0   # real wall-clock of the whole search
     worker_retries: int = 0   # Σ re-invocations after worker crashes
+    # Per-node dollar attribution: one row per invocation (plus a synthetic
+    # "co" row when a run billed the coordinator without tracing one), each
+    # splitting the Eqs. 3–8 components. Rows sum to ``cost`` — see
+    # :func:`attribute_cost`.
+    dollars_attributed: Optional[List[Dict]] = None
 
     @property
     def payload_bytes(self) -> int:
@@ -148,6 +155,102 @@ class RunTrace:
         return _from_fields(RunTrace, data)
 
 
+def _distribute(rows: List[Dict], key: str, weights: List[float],
+                total: float) -> None:
+    """Split ``total`` over ``rows[key]`` proportional to ``weights``.
+
+    Zero totals distribute nothing; an all-zero weight vector falls back to
+    a uniform split (the component was billed but no node claimed it). The
+    float residual of the proportional split lands on the largest share, so
+    the rows sum back to ``total`` to within one rounding of the final add.
+    """
+    if not total or not rows:
+        return
+    w_sum = math.fsum(weights)
+    if w_sum <= 0.0:
+        weights = [1.0] * len(rows)
+        w_sum = float(len(rows))
+    shares = [total * w / w_sum for w in weights]
+    big = max(range(len(shares)), key=lambda i: shares[i])
+    shares[big] += total - math.fsum(shares)
+    for row, share in zip(rows, shares):
+        row[key] += share
+
+
+def attribute_cost(nodes: List[NodeTrace], *, fleet: LambdaFleet,
+                   cost: Dict, prices: PricingConstants) -> List[Dict]:
+    """Fold the Eqs. 3–8 run cost back onto the invocations that caused it.
+
+    Returns one row per node — ``{"node", "kind", "chunk", "invocation",
+    "runtime", "s3", "efs", "total"}`` — whose component columns sum to the
+    matching ``cost`` entries (and totals to ``cost["total"]``), so the
+    dashboard's $/query view and the §3.5 aggregate can never disagree:
+
+    * **invocation** — each QA/QP node is one Lambda invocation; the cost
+      model's ``+1`` coordinator charge splits over the CO's chunks (a
+      synthetic CO row is added when the model billed a coordinator but no
+      CO node ran, e.g. the empty-batch trace).
+    * **runtime** — each node's own ``billed_s × mem_mb`` GB-seconds.
+    * **s3** — DRE-miss gets, weighted by each miss's fetch time (uniform
+      over the misses when fetches were instantaneous).
+    * **efs** — stage-5 refinement reads, weighted by each node's
+      ``refined`` row count (falling back to ``adc_evals``, then uniform
+      over QP nodes, when refinement accounting is absent).
+    """
+    mem_mb = {"qa": fleet.mem_qa_mb, "qp": fleet.mem_qp_mb,
+              "co": fleet.mem_co_mb}
+    rows = [{"node": n.node, "kind": n.kind, "chunk": n.chunk,
+             "invocation": 0.0, "runtime": 0.0, "s3": 0.0, "efs": 0.0}
+            for n in nodes]
+    billed = [n.billed_s for n in nodes]
+    if not any(n.kind == "co" for n in nodes):
+        rows.append({"node": "co", "kind": "co", "chunk": -1,
+                     "invocation": 0.0, "runtime": 0.0, "s3": 0.0,
+                     "efs": 0.0})
+        billed.append(0.0)
+
+    # Invocations: one per QA/QP node, one (total) for the coordinator.
+    per_inv = prices.lambda_per_invocation
+    n_co = sum(1 for r in rows if r["kind"] == "co")
+    for row in rows:
+        row["invocation"] = (per_inv / n_co if row["kind"] == "co"
+                             else per_inv)
+    big = max(range(len(rows)), key=lambda i: rows[i]["invocation"])
+    rows[big]["invocation"] += (cost["lambda_invocation"]
+                                - math.fsum(r["invocation"] for r in rows))
+
+    # Runtime: each node's own GB-seconds (residual → largest consumer).
+    _distribute(rows, "runtime",
+                [b * mem_mb[r["kind"]] for r, b in zip(rows, billed)],
+                cost["lambda_runtime"])
+
+    # S3: DRE misses, weighted by fetch time; uniform over misses when the
+    # modeled fetches were free.
+    s3_w = [0.0 if n.dre_hit else n.fetch_s for n in nodes]
+    if math.fsum(s3_w) <= 0.0:
+        s3_w = [0.0 if n.dre_hit else 1.0 for n in nodes]
+    s3_w += [0.0] * (len(rows) - len(nodes))
+    _distribute(rows, "s3", s3_w, cost["s3"])
+
+    # EFS: refinement reads; adc_evals approximates when refined counts are
+    # missing (older traces), then uniform over the QP fleet.
+    efs_w = [float(n.refined) for n in nodes]
+    if math.fsum(efs_w) <= 0.0:
+        efs_w = [float(n.adc_evals) for n in nodes]
+    if math.fsum(efs_w) <= 0.0:
+        efs_w = [1.0 if n.kind == "qp" else 0.0 for n in nodes]
+    efs_w += [0.0] * (len(rows) - len(nodes))
+    _distribute(rows, "efs", efs_w, cost["efs"])
+
+    for row in rows:
+        row["total"] = math.fsum((row["invocation"], row["runtime"],
+                                  row["s3"], row["efs"]))
+    big = max(range(len(rows)), key=lambda i: rows[i]["total"])
+    rows[big]["total"] += (cost["total"]
+                           - math.fsum(r["total"] for r in rows))
+    return rows
+
+
 def assemble_run_trace(
     nodes: List[NodeTrace],
     *,
@@ -183,6 +286,7 @@ def assemble_run_trace(
         efs_reads=efs_reads,
         efs_read_bytes=efs_read_bytes,
     )
+    cost = squash_query_cost(fleet, prices)
     return RunTrace(
         nodes=nodes,
         makespan_s=makespan_s,
@@ -194,7 +298,9 @@ def assemble_run_trace(
         efs_read_bytes=efs_read_bytes,
         stats=stats,
         fleet=fleet,
-        cost=squash_query_cost(fleet, prices),
+        cost=cost,
+        dollars_attributed=attribute_cost(nodes, fleet=fleet, cost=cost,
+                                          prices=prices),
         cache_hits=cache_hits,
         cache_misses=cache_misses,
         transport=transport,

@@ -101,6 +101,16 @@ class Transport:
     def invoke(self, fn: str, **kw) -> Tuple[Dict, InvokeInfo]:
         return self.submit(fn, **kw).result()
 
+    def collect_metrics(self) -> Dict[str, Dict]:
+        """Pull remote registries into the local one (fleet telemetry).
+
+        Backends whose workers cannot push telemetry on their responses
+        override this (SocketTransport's STATS pull); LocalTransport has no
+        remote processes and ProcessTransport's pipe workers echo registry
+        deltas on every response instead, so the default is a no-op.
+        """
+        return {}
+
     def close(self) -> None:  # pragma: no cover - trivial default
         pass
 
@@ -264,6 +274,13 @@ class _ProcessInvocation:
         resp = pl.decode_message(data)
         _METRICS.histogram(f"transport.{t.kind}.invoke_s").observe(
             p.t_done - p.t_submit)
+        # Fleet telemetry: a pipe worker serving an obs-enabled request
+        # echoes its registry delta since the previous echo; absorb it
+        # under the worker's pid so fleet_snapshot() can label the source.
+        wmetrics = winfo.get("metrics")
+        if wmetrics:
+            _METRICS.absorb_snapshot(
+                wmetrics, source=f"pid:{int(winfo['os_pid'])}")
         info = InvokeInfo(
             os_pid=int(winfo["os_pid"]),
             warm=int(winfo["served_before"]) > 0,

@@ -41,6 +41,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.metrics import REGISTRY as _METRICS
+from repro.obs.metrics import snapshot_delta
 from repro.serverless import payload as pl
 
 __all__ = [
@@ -278,17 +280,35 @@ class RequestServer:
     with offsets relative to handler entry, echoing the received context so
     the client can verify the stitch. Without a context none of this runs —
     tracing is strictly opt-in per request.
+
+    A span context also switches on this process's metrics registry
+    (fleet telemetry: the parent asked for observability, so the container
+    starts accounting) and records the worker-side instruments —
+    ``worker.requests`` / ``worker.state_hits`` counters and the
+    ``worker.handle_s`` busy histogram — that only exist in worker
+    processes, never in the client. With ``echo_metrics=True`` (the pipe
+    workers: their only wire back is the response) each response's ``info``
+    additionally carries ``info["metrics"]``, the registry delta since the
+    previous echo, for the client to absorb per pid. Socket hosts pass
+    ``echo_metrics=False``: several RequestServers share one host process
+    (and one process-global registry), so per-server deltas would double-
+    count — the host answers the transport's STATS frame with one
+    cumulative process snapshot instead.
     """
 
-    def __init__(self, init: WorkerInit):
+    def __init__(self, init: WorkerInit, echo_metrics: bool = False):
         self.init = init
         self.state = None
         self.served = 0
+        self.echo_metrics = echo_metrics
+        self._echoed: Optional[Dict] = None   # cumulative snapshot last sent
 
     def handle(self, payload: bytes, extra: Optional[Dict]):
         extra = extra or {}
         obs_ctx = pl.extract_span_context(extra)
         marks = [] if obs_ctx is not None else None
+        if obs_ctx is not None and not _METRICS.enabled:
+            _METRICS.enable()
         info = {"os_pid": os.getpid(), "served_before": self.served}
         self.served += 1
         try:
@@ -324,6 +344,16 @@ class RequestServer:
                 marks.append(["serialize", t2 - t0, t3 - t0])
                 info["obs"] = {"run": obs_ctx["run"],
                                "parent": obs_ctx["span"], "spans": marks}
+                # Worker-side instruments (exist only in this process —
+                # the fleet view is where the client ever sees them).
+                _METRICS.counter("worker.requests").inc()
+                if info["state_hit"]:
+                    _METRICS.counter("worker.state_hits").inc()
+                _METRICS.histogram("worker.handle_s").observe(t3 - t0)
+                if self.echo_metrics:
+                    cur = _METRICS.snapshot()
+                    info["metrics"] = snapshot_delta(cur, self._echoed)
+                    self._echoed = cur
             return True, data, info
         except Exception:                            # noqa: BLE001
             info.setdefault("fetch_s", 0.0)
@@ -339,7 +369,7 @@ def worker_main(init: WorkerInit, req_conn, resp_conn) -> None:
     the :class:`RequestServer` semantics above.
     """
     configure_jax(init)
-    server = RequestServer(init)
+    server = RequestServer(init, echo_metrics=True)
     while True:
         try:
             msg = req_conn.recv()  # squash: ignore[wire-raw-socket] -- mp pipe Connection.recv, not a TCP socket; the payload inside was budget-checked at submit

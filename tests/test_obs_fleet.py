@@ -1,0 +1,425 @@
+"""Tier-1 fleet-telemetry tests: merge algebra, SLO monitors, attribution.
+
+Everything here runs without real worker processes (the transport-tier
+half of PR 10 — pipe-worker delta echoes and socket STATS pulls over live
+fleets — lives in ``tests/test_obs_transport.py``):
+
+* Snapshot **merge exactness**: counters/gauges add losslessly, histogram
+  merges add per-bucket counts (including the +inf overflow bucket) so
+  quantiles over the merged registry equal quantiles over the union of
+  observations; mismatched bucket layouts refuse to merge.
+* ``snapshot_delta``: cumulative → incremental conversion (what pipe
+  workers echo), including the no-change and first-echo cases.
+* **Source-labelled absorption**: the same instrument name arriving from
+  several pids/hosts keeps per-source registries intact while the merged
+  view adds across them; re-absorbing a cumulative source with
+  ``replace=True`` does not double-count; gauges are last-write-wins
+  within a source and additive across sources.
+* **SLO monitors**: exact windowed quantiles (empty window, single
+  sample, eviction), ratio windows, the insufficient-data gate semantics,
+  and ``SloTracker`` over both live ``RunTrace`` objects and JSONL
+  records.
+* **Cost attribution**: per-node dollars sum back to every §3.5
+  component on a real run, the synthetic-CO row covers the empty batch,
+  and the JSON round-trip preserves rows.
+* The ``obs.top`` dashboard and the spans-less ``obs.timeline`` fallback
+  render from the same records.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.obs.export import run_record
+from repro.obs.metrics import (Histogram, MetricsRegistry,
+                               bounds_from_buckets, snapshot_delta)
+from repro.obs.slo import (RollingQuantile, RollingRatio, SloObjective,
+                           SloPolicy, SloTracker, default_policy)
+from repro.obs.spans import Recorder
+from repro.serverless.runtime import RuntimeConfig, ServerlessRuntime
+from repro.serverless.traces import (NodeTrace, RunTrace, assemble_run_trace,
+                                     attribute_cost)
+
+
+# ------------------------------------------------------------ merge algebra
+
+
+def test_histogram_merge_is_lossless():
+    # Two registries observing disjoint values; merging one's snapshot into
+    # the other must equal a single histogram that saw every observation.
+    a = Histogram("h", buckets=(1.0, 2.0, 4.0))
+    b = Histogram("h", buckets=(1.0, 2.0, 4.0))
+    ref = Histogram("h", buckets=(1.0, 2.0, 4.0))
+    for v in (0.5, 1.5, 3.0):
+        a.observe(v)
+        ref.observe(v)
+    for v in (3.5, 100.0, 0.25):           # 100.0 → +inf overflow bucket
+        b.observe(v)
+        ref.observe(v)
+    a.merge(b.snapshot())
+    sa, sr = a.snapshot(), ref.snapshot()
+    assert sa["count"] == sr["count"] == 6
+    assert sa["buckets"] == sr["buckets"]
+    assert sa["sum"] == pytest.approx(sr["sum"])
+    for q in (0.25, 0.5, 0.9, 0.99):
+        assert a.quantile(q) == ref.quantile(q)
+
+
+def test_histogram_merge_rejects_mismatched_buckets():
+    a = Histogram("h", buckets=(1.0, 2.0))
+    b = Histogram("h", buckets=(1.0, 3.0))
+    with pytest.raises(ValueError):
+        a.merge(b.snapshot())
+
+
+def test_bounds_round_trip_through_snapshot():
+    bounds = (0.001, 0.25, 7.5, 1e6)
+    h = Histogram("h", buckets=bounds)
+    assert bounds_from_buckets(h.snapshot()["buckets"]) == bounds
+
+
+def test_snapshot_delta_cumulative_to_incremental():
+    reg = MetricsRegistry(enabled=True)
+    reg.counter("c").inc(3)
+    reg.histogram("h", buckets=(1.0, 2.0)).observe(0.5)
+    first = reg.snapshot()
+    # First echo: no previous snapshot → the delta IS the snapshot.
+    assert snapshot_delta(first, None) == first
+    reg.counter("c").inc(2)
+    reg.histogram("h", buckets=(1.0, 2.0)).observe(1.5)
+    delta = snapshot_delta(reg.snapshot(), first)
+    assert delta["counters"] == {"c": 2}
+    hd = delta["histograms"]["h"]
+    assert hd["count"] == 1 and hd["buckets"]["2.0"] == 1
+    assert hd["buckets"]["1.0"] == 0
+    # Nothing changed since → empty delta sections.
+    quiet = snapshot_delta(reg.snapshot(), reg.snapshot())
+    assert quiet["counters"] == {} and quiet["histograms"] == {}
+
+
+def test_absorb_labels_sources_and_merges_across_them():
+    reg = MetricsRegistry(enabled=True)
+    reg.counter("worker.requests").inc(1)      # client-local share
+    # Two pids and one remote host all report the SAME instrument names.
+    reg.absorb_snapshot({"counters": {"worker.requests": 5}}, source="pid:10")
+    reg.absorb_snapshot({"counters": {"worker.requests": 7}}, source="pid:11")
+    reg.absorb_snapshot({"counters": {"worker.requests": 2}},
+                        source="10.0.0.2:9000/pid:44")
+    fleet = reg.fleet_snapshot()
+    assert sorted(fleet["remote"]) == ["10.0.0.2:9000/pid:44",
+                                      "pid:10", "pid:11"]
+    assert fleet["remote"]["pid:10"]["counters"]["worker.requests"] == 5
+    assert fleet["local"]["counters"]["worker.requests"] == 1
+    assert fleet["merged"]["counters"]["worker.requests"] == 15
+
+
+def test_absorb_replace_does_not_double_count_cumulative_sources():
+    reg = MetricsRegistry(enabled=True)
+    # A socket host reports *cumulative* snapshots: pulling twice with
+    # replace=True must keep the latest, not the sum.
+    reg.absorb_snapshot({"counters": {"worker.requests": 5}},
+                        source="h:1/pid:9", replace=True)
+    reg.absorb_snapshot({"counters": {"worker.requests": 8}},
+                        source="h:1/pid:9", replace=True)
+    assert reg.fleet_snapshot()["merged"]["counters"]["worker.requests"] == 8
+    # Without replace (pipe-worker deltas), absorption accumulates.
+    reg.absorb_snapshot({"counters": {"worker.requests": 2}}, source="pid:3")
+    reg.absorb_snapshot({"counters": {"worker.requests": 2}}, source="pid:3")
+    assert reg.fleet_snapshot()["remote"]["pid:3"][
+        "counters"]["worker.requests"] == 4
+
+
+def test_gauge_last_write_within_source_additive_across():
+    reg = MetricsRegistry(enabled=True)
+    reg.absorb_snapshot({"gauges": {"pool.live": 3}}, source="pid:1")
+    reg.absorb_snapshot({"gauges": {"pool.live": 4}}, source="pid:1")
+    reg.absorb_snapshot({"gauges": {"pool.live": 2}}, source="pid:2")
+    fleet = reg.fleet_snapshot()
+    assert fleet["remote"]["pid:1"]["gauges"]["pool.live"] == 4
+    assert fleet["merged"]["gauges"]["pool.live"] == 6
+
+
+def test_histogram_merge_through_fleet_snapshot_keeps_quantiles():
+    reg = MetricsRegistry(enabled=True)
+    reg.histogram("lat", buckets=(1.0, 2.0, 4.0)).observe(0.5)
+    worker = MetricsRegistry(enabled=True)
+    for v in (1.5, 3.0, 3.5, 50.0):
+        worker.histogram("lat", buckets=(1.0, 2.0, 4.0)).observe(v)
+    reg.absorb_snapshot(worker.snapshot(), source="pid:5")
+    ref = Histogram("lat", buckets=(1.0, 2.0, 4.0))
+    for v in (0.5, 1.5, 3.0, 3.5, 50.0):
+        ref.observe(v)
+    merged = reg.fleet_snapshot()["merged"]["histograms"]["lat"]
+    assert merged["count"] == 5
+    assert merged["p50"] == ref.snapshot()["p50"]
+    assert merged["p99"] == ref.snapshot()["p99"]
+
+
+def test_disabled_registry_fleet_calls_are_noops():
+    reg = MetricsRegistry(enabled=False)
+    reg.absorb_snapshot({"counters": {"c": 1}}, source="pid:1")
+    reg.merge_snapshot({"counters": {"c": 1}})
+    assert reg.remote_sources() == ()
+
+
+# -------------------------------------------------------------- SLO monitors
+
+
+def test_rolling_quantile_empty_single_and_eviction():
+    rq = RollingQuantile(window=3)
+    assert rq.quantile(0.5) is None and rq.mean is None
+    rq.observe(10.0)
+    assert rq.quantile(0.0) == rq.quantile(0.5) == rq.quantile(1.0) == 10.0
+    rq.observe(20.0)
+    rq.observe(30.0)
+    assert rq.quantile(0.5) == 20.0
+    rq.observe(40.0)                      # evicts the 10.0 sample
+    assert rq.count == 3
+    assert rq.quantile(0.0) == 20.0 and rq.quantile(1.0) == 40.0
+    with pytest.raises(ValueError):
+        rq.quantile(1.5)
+
+
+def test_rolling_ratio_window_eviction():
+    rr = RollingRatio(window=2)
+    assert rr.ratio is None
+    rr.observe(1, 1)                      # a failure...
+    rr.observe(0, 1)
+    rr.observe(0, 1)                      # ...evicted here
+    assert rr.ratio == 0.0
+
+
+def test_slo_gate_insufficient_data_is_not_a_violation():
+    tracker = SloTracker(window=4)
+    report = default_policy().evaluate(tracker)
+    assert report.ok and not report.conclusive
+    assert all(e["ok"] is None for e in report.entries)
+
+
+def test_slo_gate_violation_and_summary():
+    tracker = SloTracker(window=4)
+    tracker._observe(latency_s=50.0, retries=0, invocations=3,
+                     cache_hits=0, cache_misses=0)
+    policy = default_policy(p50_s=1.0)
+    report = policy.evaluate(tracker)
+    assert not report.ok and report.failures
+    assert "VIOLATED" in report.summary()
+    # Floors gate with >=: a cache-hit-rate floor fails from below.
+    floor = SloPolicy([SloObjective("cache", "cache_hit_rate", 0.9, ">=")])
+    tracker.cache.observe(1, 10)
+    assert not floor.evaluate(tracker).ok
+
+
+def test_slo_objective_validation():
+    with pytest.raises(ValueError):
+        SloObjective("x", "nope", 1.0)
+    with pytest.raises(ValueError):
+        SloObjective("x", "latency_p50", 1.0, op="!=")
+    tracker = SloTracker()
+    with pytest.raises(ValueError):
+        tracker.value("nope")
+
+
+def test_slo_tracker_error_budget_and_records():
+    tracker = SloTracker(window=8)
+    for _ in range(3):
+        tracker.observe_record(
+            {"meta": {"measured_makespan_s": 0.5},
+             "run_trace": {"nodes": [{}] * 4, "worker_retries": 1,
+                           "cache_hits": 3, "cache_misses": 1}})
+    tracker.observe_error()
+    assert tracker.value("error_rate") == pytest.approx(0.25)
+    assert tracker.value("retry_rate") == pytest.approx(3 / 12)
+    assert tracker.value("cache_hit_rate") == pytest.approx(0.75)
+    assert tracker.value("latency_p99") == pytest.approx(0.5)
+    # from_records builds the same monitors from a persisted stream.
+    recs = [{"meta": {"makespan_s": float(i)}, "run_trace": {}}
+            for i in (1, 2, 3)]
+    assert SloTracker.from_records(recs).value(
+        "latency_p50") == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------- cost attribution
+
+
+def _tiny_runtime(**overrides):
+    from benchmarks.common import build_tiny_squash_index
+
+    ds, preds, idx = build_tiny_squash_index(
+        scale=0.003, num_queries=8, num_partitions=3, seed=7)
+    return ds, preds, ServerlessRuntime(
+        idx, RuntimeConfig(branching=2, max_level=1, **overrides))
+
+
+COMPONENTS = (("invocation", "lambda_invocation"),
+              ("runtime", "lambda_runtime"), ("s3", "s3"), ("efs", "efs"),
+              ("total", "total"))
+
+
+def _assert_sums(trace):
+    rows = trace.dollars_attributed
+    assert rows
+    for comp, key in COMPONENTS:
+        attributed = math.fsum(r[comp] for r in rows)
+        assert attributed == pytest.approx(trace.cost[key], rel=1e-9,
+                                           abs=1e-18), comp
+
+
+def test_attribution_sums_to_cost_on_real_run():
+    ds, preds, rt = _tiny_runtime()
+    trace = rt.search(ds.queries, preds, k=10).trace
+    _assert_sums(trace)
+    rows = trace.dollars_attributed
+    # One row per node, all components non-negative, EFS lands on QPs
+    # (they do the stage-5 refinement) and every QA/QP row pays exactly
+    # one invocation before residual correction.
+    assert len(rows) == len(trace.nodes)
+    assert all(r[c] >= 0 for r in rows for c, _ in COMPONENTS)
+    assert math.fsum(r["efs"] for r in rows if r["kind"] == "qp") == (
+        pytest.approx(trace.cost["efs"], rel=1e-9, abs=1e-18))
+    # refined counts made it onto the QP nodes and drive the EFS weights.
+    assert sum(n.refined for n in trace.nodes) == trace.stats.refined > 0
+
+
+def test_attribution_empty_batch_synthesizes_co_row():
+    ds, preds, rt = _tiny_runtime()
+    trace = rt.search(np.zeros((0, ds.queries.shape[1])), k=5).trace
+    rows = trace.dollars_attributed
+    assert [r["kind"] for r in rows] == ["co"] and rows[0]["chunk"] == -1
+    assert math.fsum(r["total"] for r in rows) == pytest.approx(
+        trace.cost["total"], rel=1e-9, abs=1e-18)
+
+
+def test_attribution_fallback_weights():
+    # Hand-built nodes with no refinement accounting: EFS falls back to
+    # adc_evals; S3 splits over the DRE misses by fetch time.
+    nodes = [
+        NodeTrace(node="co", kind="co", parent="client", chunk=0,
+                  t_issue=0.0, t_start=0.1, t_end=0.4, invoke_s=0.1,
+                  fetch_s=0.0, compute_s=0.1, request_bytes=10,
+                  response_bytes=10, warm=True, dre_hit=True, queries=4),
+        NodeTrace(node="qp:0", kind="qp", parent="co", chunk=0,
+                  t_issue=0.1, t_start=0.2, t_end=0.3, invoke_s=0.1,
+                  fetch_s=0.2, compute_s=0.1, request_bytes=10,
+                  response_bytes=10, warm=False, dre_hit=False, queries=4,
+                  adc_evals=30),
+        NodeTrace(node="qp:1", kind="qp", parent="co", chunk=0,
+                  t_issue=0.1, t_start=0.2, t_end=0.35, invoke_s=0.1,
+                  fetch_s=0.6, compute_s=0.1, request_bytes=10,
+                  response_bytes=10, warm=False, dre_hit=False, queries=4,
+                  adc_evals=10),
+    ]
+    from repro.core.cost_model import PricingConstants
+    from repro.core.dre import DreStats
+    from repro.core.pipeline import SearchStats
+
+    trace = assemble_run_trace(
+        nodes, makespan_s=0.4, escalations=0,
+        dre=DreStats(invocations=3, s3_gets=2), efs_reads=40,
+        efs_read_bytes=40 * 512, stats=SearchStats(queries=4),
+        mem_qa_mb=1770, mem_qp_mb=1770, mem_co_mb=1770,
+        prices=PricingConstants())
+    _assert_sums(trace)
+    rows = {r["node"]: r for r in trace.dollars_attributed}
+    assert rows["co"]["s3"] == 0.0 and rows["co"]["efs"] == 0.0
+    # fetch-time weighting: qp:1 fetched 3× longer → 3× the S3 share.
+    assert rows["qp:1"]["s3"] == pytest.approx(3 * rows["qp:0"]["s3"])
+    # adc fallback: qp:0 did 3× the ADC work → 3× the EFS share.
+    assert rows["qp:0"]["efs"] == pytest.approx(3 * rows["qp:1"]["efs"])
+
+
+def test_attribution_round_trips_json():
+    ds, preds, rt = _tiny_runtime()
+    trace = rt.search(ds.queries, preds, k=10).trace
+    back = RunTrace.from_json(json.loads(json.dumps(trace.to_json())))
+    assert back.dollars_attributed == trace.dollars_attributed
+    # Old traces without the field still load.
+    legacy = trace.to_json()
+    del legacy["dollars_attributed"]
+    assert RunTrace.from_json(legacy).dollars_attributed is None
+
+
+def test_attribute_cost_distributes_full_total():
+    # Direct fold on a degenerate single-node fleet: the lone QP carries
+    # everything except the coordinator's synthetic invocation share.
+    from repro.core.cost_model import (LambdaFleet, PricingConstants,
+                                      squash_query_cost)
+
+    node = NodeTrace(node="qp:0", kind="qp", parent="co", chunk=0,
+                     t_issue=0.0, t_start=0.0, t_end=1.0, invoke_s=0.0,
+                     fetch_s=0.0, compute_s=1.0, request_bytes=1,
+                     response_bytes=1, warm=True, dre_hit=True, queries=1,
+                     refined=5)
+    prices = PricingConstants()
+    fleet = LambdaFleet(n_qa=0, n_qp=1, mem_qa_mb=1, mem_qp_mb=1024,
+                        mem_co_mb=1, t_qa_s=0.0, t_qp_s=1.0, t_co_s=0.0,
+                        s3_gets=0, efs_reads=5, efs_read_bytes=5 * 512)
+    cost = squash_query_cost(fleet, prices)
+    rows = attribute_cost([node], fleet=fleet, cost=cost, prices=prices)
+    assert {r["node"] for r in rows} == {"qp:0", "co"}
+    assert math.fsum(r["total"] for r in rows) == pytest.approx(
+        cost["total"], rel=1e-12, abs=1e-18)
+
+
+# ------------------------------------------------------- dashboard + timeline
+
+
+def _record_with_everything(rt, ds, preds):
+    from repro.obs.metrics import REGISTRY
+
+    res = rt.search(ds.queries, preds, k=10)
+    rec = rt.obs_exporter.records[-1]
+    return res, rec
+
+
+def test_top_dashboard_renders_records():
+    from repro.obs.metrics import REGISTRY
+    from repro.obs.top import render_dashboard, render_metrics
+
+    ds, preds, rt = _tiny_runtime(obs_enabled=True)
+    try:
+        _, rec = _record_with_everything(rt, ds, preds)
+        text = render_dashboard([rec])
+        assert "fleet metrics:" in text and "slo:" in text
+        assert "cost attribution" in text and "/query" in text
+        assert "gate [default]: PASS" in text
+        # The metrics pane accepts both fleet and plain snapshots.
+        assert "worker" not in render_metrics({})  # empty → no crash
+        assert render_metrics(rec["metrics"])
+        assert render_dashboard([]) == "(no run records yet)"
+    finally:
+        REGISTRY.disable()
+        REGISTRY.reset()
+
+
+def test_timeline_spansless_fallback_and_metrics_flag():
+    from repro.obs.metrics import REGISTRY
+    from repro.obs.timeline import render_record, render_records
+
+    ds, preds, rt = _tiny_runtime(obs_enabled=True)
+    try:
+        _, rec = _record_with_everything(rt, ds, preds)
+        bare = dict(rec)
+        bare["spans"] = []                # zero stitched spans
+        text = render_record(bare)
+        assert "qp:" in text and "(modeled)" in text
+        with_metrics = render_records([rec], metrics=True)
+        assert "fleet metrics:" in with_metrics
+        assert "fleet metrics:" not in render_records([rec])
+    finally:
+        REGISTRY.disable()
+        REGISTRY.reset()
+
+
+def test_run_record_carries_metrics_and_slo_sections():
+    rec = Recorder()
+    rec.record("search", 0.0, 1.0)
+    record = run_record(rec, meta={"transport": "local"},
+                        metrics={"merged": {}, "remote": {}, "local": {}},
+                        slo={"runs": 1})
+    assert record["metrics"]["remote"] == {} and record["slo"]["runs"] == 1
+    assert "metrics" not in run_record(rec)   # optional sections stay absent

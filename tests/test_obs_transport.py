@@ -111,6 +111,53 @@ def test_real_transport_obs_parity_and_stitching(built, transport):
         REGISTRY.reset()
 
 
+@pytest.mark.parametrize("transport", ["process", "socket"])
+def test_fleet_aggregation_over_real_workers(built, transport):
+    """PR 10: worker-side instruments reach the client's fleet view.
+
+    Pipe workers echo registry *deltas* in response info; socket hosts
+    answer STATS pulls with *cumulative* snapshots (absorbed with
+    replace). Either way, the merged ``worker.requests`` must equal the
+    number of QA/QP invocations actually served — echoed deltas that
+    double-counted, or replace that summed, would break the equality —
+    and worker instruments must never appear in the client-local registry.
+    """
+    ds, preds, idx, (ref_ids, _) = built
+    rt = ServerlessRuntime(idx, _cfg(transport, obs_enabled=True))
+    try:
+        r1 = rt.search(ds.queries, preds, k=10)
+        r2 = rt.search(ds.queries, preds, k=10)
+        np.testing.assert_array_equal(r2.ids, ref_ids)
+        fleet = REGISTRY.fleet_snapshot()
+        sources = sorted(fleet["remote"])
+        assert sources, "no remote sources absorbed"
+        if transport == "process":
+            assert all(s.startswith("pid:") for s in sources)
+        else:
+            # host:port/pid labels, matching the hosts the trace reports.
+            assert all(":" in s.split("/pid:")[0] for s in sources)
+            hosts = {s.split("/pid:")[0] for s in sources}
+            assert hosts == set(r2.trace.worker_hosts)
+        served = sum(1 for n in (*r1.trace.nodes, *r2.trace.nodes)
+                     if n.kind != "co")
+        merged = fleet["merged"]["counters"]
+        assert merged.get("worker.requests") == served
+        assert sum(snap["counters"].get("worker.requests", 0)
+                   for snap in fleet["remote"].values()) == served
+        assert "worker.requests" not in fleet["local"]["counters"]
+        handle = fleet["merged"]["histograms"]["worker.handle_s"]
+        assert handle["count"] == served and handle["p50"] is not None
+        # The exported record carries the same merged view.
+        rec = _obs_record(rt)
+        assert rec["metrics"]["merged"]["counters"][
+            "worker.requests"] == served
+        assert rec["slo"]["runs"] == 2
+    finally:
+        rt.close()
+        REGISTRY.disable()
+        REGISTRY.reset()
+
+
 def test_process_crash_increments_retry_metrics(built):
     ds, preds, idx, (ref_ids, _) = built
     rt = ServerlessRuntime(idx, _cfg("process", obs_enabled=True,
